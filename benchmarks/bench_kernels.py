@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: wall time of the jnp reference paths on CPU
+(the Pallas kernels themselves are TPU-target; interpret mode timings are
+not meaningful), plus ref-vs-kernel parity checks.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def main(quick=False):
+    rows = []
+    rng = np.random.default_rng(0)
+
+    from repro.kernels.flash_attention.ref import mha_ref
+    from repro.models.attention import chunked_attention
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 512, 64)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((1, 2, 512, 64)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((1, 2, 512, 64)).astype(np.float32))
+    f_ref = jax.jit(lambda q, k, v: mha_ref(q, k, v))
+    f_chunk = jax.jit(lambda q, k, v: chunked_attention(q, k, v, chunk=128))
+    rows.append(("kernel/attn_ref_512", _time(f_ref, q, k, v), ""))
+    rows.append(("kernel/attn_chunked_512", _time(f_chunk, q, k, v), ""))
+
+    from repro.kernels.fm_interaction.ref import fm_interaction_ref
+
+    emb = jnp.asarray(rng.standard_normal((4096, 39, 10)).astype(np.float32))
+    rows.append(("kernel/fm_ref_4096x39x10",
+                 _time(jax.jit(fm_interaction_ref), emb), ""))
+
+    from repro.kernels.segment_reduce.ref import segment_sum_sorted_ref
+
+    seg = jnp.asarray(np.sort(rng.integers(0, 1024, 65536)).astype(np.int32))
+    dat = jnp.asarray(rng.standard_normal((65536, 64)).astype(np.float32))
+    rows.append(("kernel/segsum_ref_64k",
+                 _time(jax.jit(lambda d, s: segment_sum_sorted_ref(d, s, 1024)),
+                       dat, seg), ""))
+
+    from repro.core import connectivity as cn
+    from repro.data import graphs as gen
+
+    g = gen.rmat(scale=12)
+    parts = jnp.asarray(rng.integers(0, 16, g.n_max).astype(np.int32))
+    rows.append(("kernel/conn_dense_rmat12",
+                 _time(lambda: cn.dense_queries(g, parts, 16)), ""))
+    rows.append(("kernel/conn_sorted_rmat12",
+                 _time(lambda: cn.sorted_queries(g, parts, 16)), ""))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Benchmark graph suite: one laptop-scale member per paper graph class."""
+from repro.data import graphs as gen
+
+SUITE = {
+    # name -> (factory kwargs, paper class)
+    "grid": (lambda: gen.grid2d(96, 96), "artificial mesh (2D)"),
+    "cube": (lambda: gen.grid3d(21, 21, 21), "artificial mesh (3D)"),
+    "geo": (lambda: gen.random_geometric(8192, seed=1), "finite element"),
+    "rmat": (lambda: gen.rmat(scale=13, edge_factor=8, seed=2), "social network"),
+    "smallworld": (lambda: gen.small_world(8192, k_ring=6, seed=3),
+                   "complex network"),
+}
+
+
+def load(name):
+    return SUITE[name][0]()

@@ -1,0 +1,113 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+    compute_s    = flops_per_device / PEAK_FLOPS
+    memory_s     = bytes_per_device / HBM_BW
+    collective_s = collective_bytes_per_device / LINK_BW
+(all per-device: the dry-run HLO is the partitioned per-device program).
+
+Hardware constants (TPU v5e-class, from the assignment):
+    197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+flops/bytes come from the loop-corrected HLO cost model
+(launch/hlo_cost.py) because XLA's cost_analysis counts while bodies once.
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N = active params.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link
+
+CHIPS = {"pod16x16": 256, "pod2x16x16": 512}
+
+
+def load_cells(art_dir="artifacts/dryrun", mesh=None):
+    cells = []
+    pattern = os.path.join(art_dir, mesh or "*", "*.json")
+    for p in sorted(glob.glob(pattern)):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(rec):
+    if rec["status"] != "ok":
+        return None
+    chips = CHIPS[rec["mesh"]]
+    flops = rec["cost"]["flops"]            # per device (partitioned HLO)
+    byts = rec["cost"]["bytes"]
+    coll = rec["cost"]["collective_bytes"]
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    model_flops_total = rec["meta"]["model_flops"]
+    model_flops_dev = model_flops_total / chips
+    useful_ratio = model_flops_dev / flops if flops else 0.0
+    # roofline fraction: useful model flops per device / what the chips
+    # could do in the bottleneck-bound step time
+    frac = (model_flops_dev / PEAK_FLOPS) / step_s if step_s else 0.0
+    return {
+        "mesh": rec["mesh"],
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "kind": rec["meta"]["kind"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "step_s": step_s,
+        "model_flops": model_flops_total,
+        "hlo_flops_dev": flops,
+        "useful_ratio": useful_ratio,
+        "roofline_frac": frac,
+        "peak_gib": rec["memory"]["peak_estimate_bytes"] / 2**30,
+    }
+
+
+def table(art_dir="artifacts/dryrun", mesh="pod16x16"):
+    rows = []
+    for rec in load_cells(art_dir, mesh):
+        r = roofline_row(rec)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful (6ND/HLO) | roofline frac | peak GiB |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.2%} | {r['peak_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    for mesh in ("pod16x16",):
+        rows = table(mesh=mesh)
+        if not rows:
+            print(f"# no artifacts for {mesh}; run repro.launch.dryrun first")
+            continue
+        print(f"# Roofline ({mesh}, single pod, per-device terms)")
+        for r in sorted(rows, key=lambda r: -r["step_s"]):
+            print(f"roofline/{r['arch']}/{r['shape']},{r['step_s']*1e6:.1f},"
+                  f"bottleneck={r['bottleneck']};frac={r['roofline_frac']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call_or_ratio,derived`` CSV lines.
+
+  bench_component    -> Table 3 (Jetlp ablations)
+  bench_refinement   -> Tables 4/5 (refinement effectiveness + 2D weakness)
+  bench_partitioner  -> Table 1/2 + Fig 1 (end-to-end quality, breakdown)
+  bench_kernels      -> kernel micro-benchmarks
+  roofline           -> EXPERIMENTS.md §Roofline (needs dry-run artifacts)
+
+``--quick`` trims suites/seeds for CI-speed runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="component|refinement|partitioner|kernels|roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_component, bench_kernels,
+                            bench_partitioner, bench_refinement, roofline)
+
+    sections = {
+        "kernels": lambda: bench_kernels.main(quick=args.quick),
+        "component": lambda: bench_component.main(quick=args.quick),
+        "refinement": lambda: bench_refinement.main(quick=args.quick),
+        "partitioner": lambda: bench_partitioner.main(quick=args.quick),
+        "roofline": roofline.main,
+    }
+    for name, fn in sections.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n== {name} ==", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report loudly
+            print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+            raise
+        print(f"# {name} took {time.perf_counter()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""End-to-end training driver: train a small LM for a few hundred steps with
+the full production loop (AdamW + schedule, checkpointing, watchdog).
+
+    PYTHONPATH=src python examples/lm_train.py [--steps 300]
+"""
+import argparse
+
+from repro.launch import train as train_launch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="gemma3-1b")
+    args = ap.parse_args()
+    train_launch.main([
+        "--arch", args.arch, "--steps", str(args.steps),
+        "--ckpt-dir", "/tmp/repro_lm_train_example",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""The paper's technique as a distribution substrate: Jet-partition a graph,
+lay it out across (virtual) devices, and train GraphSAGE — reporting the
+collective-traffic reduction the partitioner buys per message-passing layer.
+
+    PYTHONPATH=src python examples/partition_gnn_training.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import PartitionConfig, partition
+from repro.core.graph import build_csr_host
+from repro.data import synthetic as synth
+from repro.dist.partition_aware import (
+    comm_bytes_per_layer, naive_plan, plan_from_partition,
+)
+from repro.models.gnn import graphsage
+from repro.models.gnn.common import GraphBatch
+
+
+def mesh_showcase(k_devices=8):
+    """Mesh-structured graph (typical FEM/simulation workload): this is
+    where the partitioner's halo reduction is dramatic."""
+    from repro.data import graphs as gen
+
+    g = gen.grid2d(64, 64)
+    res = partition(g, PartitionConfig(k=k_devices, lam=0.05))
+    jet = plan_from_partition(g, res.parts, k_devices)
+    naive = naive_plan(g, k_devices)
+    cbn = comm_bytes_per_layer(naive, 128)
+    cbj = comm_bytes_per_layer(jet, 128)
+    print(f"mesh 64x64 across {k_devices} devices:")
+    print(f"  local edges: naive {naive.local_edge_frac:.1%} -> "
+          f"jet {jet.local_edge_frac:.1%}")
+    print(f"  halo vertices: naive {naive.halo_fraction:.1%} -> "
+          f"jet {jet.halo_fraction:.1%}")
+    print(f"  per-layer comm: {cbn['naive_allgather']/1e6:.2f} MB -> "
+          f"{cbj['partition_halo']/1e6:.3f} MB "
+          f"({cbn['naive_allgather']/max(cbj['partition_halo'],1):.0f}x less)")
+
+
+def main():
+    mesh_showcase()
+
+    n, n_classes, d_feat = 1200, 8, 64
+    edges, feats, labels = synth.community_graph(
+        n=n, n_classes=n_classes, d_feat=d_feat, seed=0)
+    g = build_csr_host(n, edges)
+
+    k_devices = 8
+    print(f"\nSBM graph: n={n} m={int(g.m)//2}; partitioning for "
+          f"{k_devices} devices")
+    res = partition(g, PartitionConfig(k=k_devices, lam=0.05))
+    print(f"  jet cut={res.cut} imbalance={res.imbalance:.3f}")
+
+    jet = plan_from_partition(g, res.parts, k_devices)
+    naive = naive_plan(g, k_devices)
+    print(f"  local edges: naive {naive.local_edge_frac:.1%} -> "
+          f"jet {jet.local_edge_frac:.1%}")
+    print(f"  halo vertices: naive {naive.halo_fraction:.1%} -> "
+          f"jet {jet.halo_fraction:.1%}")
+    cb_naive = comm_bytes_per_layer(naive, 128)
+    cb_jet = comm_bytes_per_layer(jet, 128)
+    print(f"  per-layer comm: all-gather {cb_naive['naive_allgather']/1e6:.2f} MB"
+          f" -> halo {cb_jet['partition_halo']/1e6:.2f} MB "
+          f"({cb_jet['reduction']:.1f}x less)")
+
+    # train on the REORDERED graph (device-contiguous vertex blocks)
+    perm = jet.perm
+    e_new = jet.edges_new
+    batch = {
+        "graph": GraphBatch(
+            node_feat=jnp.asarray(feats[perm]),
+            senders=jnp.asarray(e_new[:, 0].astype(np.int32)),
+            receivers=jnp.asarray(e_new[:, 1].astype(np.int32)),
+            edge_feat=None,
+            pos=jnp.zeros((n, 3), jnp.float32),
+            graph_id=jnp.zeros((n,), jnp.int32),
+            n_graphs=1,
+        ),
+        "labels": jnp.asarray(labels[perm].astype(np.int32)),
+    }
+    cfg = graphsage.SageConfig(n_layers=2, d_in=d_feat, d_hidden=64,
+                               n_classes=n_classes)
+    params = graphsage.init_params(cfg, jax.random.key(0))
+
+    @jax.jit
+    def step(params):
+        loss, grads = jax.value_and_grad(
+            lambda p: graphsage.loss_fn(cfg, p, batch)[0])(params)
+        return jax.tree.map(lambda a, g_: a - 0.5 * g_, params, grads), loss
+
+    for i in range(40):
+        params, loss = step(params)
+        if (i + 1) % 10 == 0:
+            print(f"  step {i+1}: loss {float(loss):.4f}")
+    logits = graphsage.forward(cfg, params, batch["graph"])
+    acc = float(jnp.mean((jnp.argmax(logits, -1) == batch["labels"])))
+    print(f"  final train accuracy: {acc:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched LM serving demo: prefill + greedy decode with a KV cache
+(MLA archs use the compressed-cache absorbed-projection path).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch deepseek-v2-lite-16b]
+"""
+import argparse
+
+from repro.launch import serve as serve_launch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-16b")
+    args = ap.parse_args()
+    serve_launch.main(["--arch", args.arch, "--batch", "4",
+                       "--prompt-len", "24", "--gen", "12"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Architecture registry: 10 assigned archs + the paper's own partitioner.
+
+Each arch module exports ``ARCH`` (see configs/base.py for the schema).
+"""
+from __future__ import annotations
+
+from importlib import import_module
+
+_MODULES = {
+    "command-r-35b": "repro.configs.command_r_35b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b",
+    "schnet": "repro.configs.schnet_cfg",
+    "nequip": "repro.configs.nequip_cfg",
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    "meshgraphnet": "repro.configs.meshgraphnet_cfg",
+    "fm": "repro.configs.fm_cfg",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_arch(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return import_module(_MODULES[arch_id]).ARCH

@@ -1,0 +1,293 @@
+"""GPU-style coarsening re-derived for TPU: HEM + two-hop matching + contraction.
+
+Paper §3.1: heavy-edge matching first; if >25% of vertices remain unmatched,
+add two-hop matches (leaves, twins, relatives).  Contraction (Alg 3.1)
+deduplicates coarse edges — the paper uses per-vertex hashtables; we use a
+lexicographic sort + segmented sum (TPU idiom, deterministic).
+
+All matching/contraction math is jittable with static padded shapes; only
+the *repacking* of the (smaller) coarse graph into tight arrays happens on
+host, because array sizes shrink level to level.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+
+_KNUTH = jnp.uint32(2654435761)
+
+
+def _bij_hash(x: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """Invertible-ish 32-bit mix used only for random tie-breaking."""
+    h = (x.astype(jnp.uint32) ^ jnp.uint32(seed)) * _KNUTH
+    h = h ^ (h >> 16)
+    return h
+
+
+def _seg_pick_dst(elig, value, dst, esrc, n_max, seed):
+    """Per-source argmax over eligible edges: max value, random tie-break.
+
+    Returns (cand (N,), has (N,)) — chosen dst per vertex or -1.
+    Three deterministic passes: max value; max hash among ties; max dst among
+    hash ties (hash collisions only weaken randomization, never correctness).
+    """
+    NEG = jnp.int32(-1)
+    v1 = jnp.where(elig, value, NEG)
+    best_v = jax.ops.segment_max(v1, esrc, num_segments=n_max)
+    tie1 = elig & (value == best_v[esrc]) & (best_v[esrc] > NEG)
+    h = (_bij_hash(dst, seed) >> jnp.uint32(1)).astype(jnp.int32)  # non-negative
+    h1 = jnp.where(tie1, h, NEG)
+    best_h = jax.ops.segment_max(h1, esrc, num_segments=n_max)
+    tie2 = tie1 & (h == best_h[esrc])
+    d1 = jnp.where(tie2, dst, NEG)
+    cand = jax.ops.segment_max(d1, esrc, num_segments=n_max)
+    return cand, cand >= 0
+
+
+@partial(jax.jit, static_argnames=("rounds",))
+def heavy_edge_matching(g: Graph, rounds: int = 8, seed: int = 0) -> jnp.ndarray:
+    """Parallel handshake HEM. Returns match (N,): mate id, or -1 unmatched.
+
+    Padding vertices are matched to themselves (excluded from everything).
+    """
+    n_max = g.n_max
+    vid = jnp.arange(n_max, dtype=jnp.int32)
+    vmask = g.vertex_mask()
+    match = jnp.where(vmask, jnp.int32(-1), vid)  # pads self-matched
+
+    def body(r, match):
+        unmatched = match < 0
+        elig = g.edge_mask() & unmatched[g.esrc] & unmatched[g.adjncy]
+        cand, has = _seg_pick_dst(
+            elig, g.adjwgt, g.adjncy, g.esrc, n_max, seed * 1000003 + r
+        )
+        cand = jnp.where(has & unmatched, cand, jnp.int32(-1))
+        # mutual handshake
+        cand_of_cand = jnp.where(cand >= 0, cand[jnp.clip(cand, 0, n_max - 1)], -2)
+        ok = (cand >= 0) & (cand_of_cand == vid)
+        return jnp.where(ok, cand, match)
+
+    return jax.lax.fori_loop(0, rounds, body, match)
+
+
+def _pair_by_key(key: jnp.ndarray, elig: jnp.ndarray, match: jnp.ndarray):
+    """Pair eligible vertices sharing a key: sort by key, pair ranks (0,1),(2,3)...
+
+    within each equal-key group (group-aligned so odd-size groups leave
+    exactly one vertex unpaired).
+    """
+    n_max = key.shape[0]
+    INF = jnp.int32(2147483647)
+    skey = jnp.where(elig, key, INF)
+    order = jnp.argsort(skey)  # stable; eligible first by key, then id
+    sk = skey[order]
+    pos = jnp.arange(n_max, dtype=jnp.int32)
+    first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
+    group_id = jnp.cumsum(first.astype(jnp.int32)) - 1
+    group_start = jnp.zeros((n_max,), jnp.int32).at[group_id].max(
+        jnp.where(first, pos, 0)
+    )
+    rank = pos - group_start[group_id]
+    valid = sk < INF
+    next_same = jnp.concatenate([sk[1:] == sk[:-1], jnp.zeros((1,), bool)])
+    is_lead = valid & (rank % 2 == 0) & next_same
+    partner_pos = jnp.where(is_lead, pos + 1, pos - 1)
+    is_follow = valid & (rank % 2 == 1)
+    paired = is_lead | is_follow
+    partner = order[jnp.clip(partner_pos, 0, n_max - 1)]
+    new_match = match.at[order].set(
+        jnp.where(paired, partner, match[order])
+    )
+    return new_match
+
+
+@jax.jit
+def twohop_matching(g: Graph, match: jnp.ndarray, mm_max_degree: int = 64):
+    """Leaves, twins, relatives (paper §3.1) via sort-pairing."""
+    n_max = g.n_max
+    vid = jnp.arange(n_max, dtype=jnp.int32)
+    vmask = g.vertex_mask()
+    deg = g.degrees()
+
+    # --- leaves: unmatched degree-1 vertices grouped by their sole neighbor
+    unmatched = (match < 0) & vmask
+    sole = g.adjncy[jnp.clip(g.xadj[:-1], 0, g.m_max - 1)]
+    elig = unmatched & (deg == 1)
+    match = _pair_by_key(jnp.where(elig, sole, 0), elig, match)
+
+    # --- twins: unmatched vertices with identical neighborhoods (hash groups)
+    unmatched = (match < 0) & vmask
+    em = g.edge_mask()
+    h1 = jnp.where(em, (_bij_hash(g.adjncy, 11) >> jnp.uint32(2)).astype(jnp.int32), 0)
+    h2 = jnp.where(em, (_bij_hash(g.adjncy, 23) >> jnp.uint32(2)).astype(jnp.int32), 0)
+    s1 = jax.ops.segment_sum(h1, g.esrc, num_segments=n_max)
+    s2 = jax.ops.segment_sum(h2, g.esrc, num_segments=n_max)
+    nbhash = ((s1 * jnp.int32(31) + s2) ^ (deg * jnp.int32(0x61C88647))) & jnp.int32(
+        0x7FFFFFFF
+    )
+    elig = unmatched & (deg >= 1)
+    match = _pair_by_key(jnp.where(elig, nbhash, 0), elig, match)
+
+    # --- relatives: pair unmatched vertices within a matchmaker's neighborhood
+    unmatched = (match < 0) & vmask
+    matched = ~unmatched & vmask
+    is_mm = matched & (deg <= mm_max_degree)
+    # does this matchmaker have unmatched neighbors? (not strictly needed:
+    # only unmatched vertices choose keys)
+    e_mm = em & is_mm[g.adjncy] & unmatched[g.esrc]
+    INF = jnp.int32(2147483647)
+    mm_key = jax.ops.segment_min(
+        jnp.where(e_mm, g.adjncy, INF), g.esrc, num_segments=n_max
+    )
+    elig = unmatched & (mm_key < INF)
+    match = _pair_by_key(jnp.where(elig, mm_key, 0), elig, match)
+    return match
+
+
+@jax.jit
+def coarse_map(g: Graph, match: jnp.ndarray):
+    """Map fine vertices to coarse ids. Returns (cmap (N,), nc scalar).
+
+    Singletons map alone; pairs map together; coarse ids ordered by leader id
+    (preserves locality).  Padding vertices map to nc.. (ghost tail).
+    """
+    n_max = g.n_max
+    vid = jnp.arange(n_max, dtype=jnp.int32)
+    vmask = g.vertex_mask()
+    mate = jnp.where(match < 0, vid, match)
+    mate = jnp.where(vmask, mate, vid)
+    leader = jnp.minimum(vid, mate)
+    is_leader = (vid == leader) & vmask
+    rank = jnp.cumsum(is_leader.astype(jnp.int32)) - 1
+    nc = jnp.sum(is_leader.astype(jnp.int32))
+    cmap = jnp.where(vmask, rank[leader], nc + (vid - g.n))
+    return cmap, nc
+
+
+@jax.jit
+def contract_edges(g: Graph, cmap: jnp.ndarray):
+    """Alg 3.1 re-derived: sort coarse (cu, cv) keys, segment-sum duplicates.
+
+    Returns padded run arrays sorted lexicographically by (cu, cv):
+      (cu_run, cv_run, w_run, run_valid, n_runs, vwgt_c (N,))
+    """
+    m_max = g.m_max
+    cu = cmap[g.esrc]
+    cv = cmap[g.adjncy]
+    keep = g.edge_mask() & (cu != cv)
+    BIG = jnp.int32(2147483647)
+    cu_s = jnp.where(keep, cu, BIG)
+    cv_s = jnp.where(keep, cv, BIG)
+    # lexicographic (cu, cv) via two stable argsorts
+    o1 = jnp.argsort(cv_s, stable=True)
+    o2 = jnp.argsort(cu_s[o1], stable=True)
+    order = o1[o2]
+    su, sv, sw = cu_s[order], cv_s[order], jnp.where(keep, g.adjwgt, 0)[order]
+    first = jnp.concatenate(
+        [jnp.ones((1,), bool), (su[1:] != su[:-1]) | (sv[1:] != sv[:-1])]
+    )
+    run_id = jnp.cumsum(first.astype(jnp.int32)) - 1
+    w_run = jax.ops.segment_sum(sw, run_id, num_segments=m_max)
+    cu_run = jnp.full((m_max,), BIG).at[run_id].min(su)
+    cv_run = jnp.full((m_max,), BIG).at[run_id].min(sv)
+    run_valid = cu_run != BIG
+    n_runs = jnp.sum(run_valid.astype(jnp.int32))
+    vwgt_c = jax.ops.segment_sum(g.vwgt, cmap, num_segments=g.n_max)
+    return cu_run, cv_run, w_run, run_valid, n_runs, vwgt_c
+
+
+class CoarsenLevel(NamedTuple):
+    graph: Graph
+    cmap: jnp.ndarray  # fine vertex -> coarse vertex of the NEXT level
+
+
+def _round_up(x: int, mult: int = 8) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def coarsen_once(
+    g: Graph,
+    twohop_threshold: float = 0.25,
+    mm_max_degree: int = 64,
+    seed: int = 0,
+) -> tuple[Graph, jnp.ndarray]:
+    """One coarsening level. Returns (coarse graph (tight arrays), cmap)."""
+    match = heavy_edge_matching(g, seed=seed)
+    n = int(g.n)
+    unmatched_frac = float(
+        np.asarray(jnp.sum(((match < 0) & g.vertex_mask()).astype(jnp.int32)))
+    ) / max(n, 1)
+    if unmatched_frac > twohop_threshold:
+        match = twohop_matching(g, match, mm_max_degree)
+    cmap, nc_dev = coarse_map(g, match)
+    cu_run, cv_run, w_run, run_valid, n_runs_dev, vwgt_c = contract_edges(g, cmap)
+    nc = int(nc_dev)
+    n_runs = int(n_runs_dev)
+    # host repack into tight padded arrays
+    cu = np.asarray(cu_run)[:n_runs]
+    cv = np.asarray(cv_run)[:n_runs]
+    w = np.asarray(w_run)[:n_runs]
+    vw = np.asarray(vwgt_c)[:nc]
+    n_max_c = _round_up(max(nc, 1))
+    m_max_c = _round_up(max(n_runs, 1))
+    xadj = np.zeros(n_max_c + 1, dtype=np.int64)
+    np.add.at(xadj, cu + 1, 1)
+    xadj = np.cumsum(xadj)
+    xadj_p = np.full(n_max_c + 1, n_runs, dtype=np.int32)
+    xadj_p[: nc + 1] = xadj[: nc + 1]
+    adjncy_p = np.zeros(m_max_c, dtype=np.int32)
+    adjncy_p[:n_runs] = cv
+    adjwgt_p = np.zeros(m_max_c, dtype=np.int32)
+    adjwgt_p[:n_runs] = w
+    vwgt_p = np.zeros(n_max_c, dtype=np.int32)
+    vwgt_p[:nc] = vw
+    esrc_p = np.zeros(m_max_c, dtype=np.int32)
+    esrc_p[:n_runs] = cu
+    gc = Graph(
+        xadj=jnp.asarray(xadj_p),
+        adjncy=jnp.asarray(adjncy_p),
+        adjwgt=jnp.asarray(adjwgt_p),
+        vwgt=jnp.asarray(vwgt_p),
+        esrc=jnp.asarray(esrc_p),
+        n=jnp.asarray(nc, dtype=jnp.int32),
+        m=jnp.asarray(n_runs, dtype=jnp.int32),
+    )
+    return gc, cmap
+
+
+def multilevel_coarsen(
+    g: Graph,
+    coarse_target: int = 4096,
+    max_levels: int = 40,
+    stall_ratio: float = 0.95,
+    seed: int = 0,
+) -> list[CoarsenLevel]:
+    """MLCoarsen (Alg 2.1 line 1): list of levels, finest first.
+
+    ``levels[i].cmap`` maps level-i vertices into level-(i+1)'s graph.
+    The last entry's cmap is None (coarsest graph).
+    """
+    levels: list[CoarsenLevel] = []
+    cur = g
+    for lvl in range(max_levels):
+        if int(cur.n) <= coarse_target:
+            break
+        gc, cmap = coarsen_once(cur, seed=seed + lvl)
+        if int(gc.n) > stall_ratio * int(cur.n):  # stalled
+            break
+        levels.append(CoarsenLevel(graph=cur, cmap=cmap))
+        cur = gc
+    levels.append(CoarsenLevel(graph=cur, cmap=None))
+    return levels
+
+
+def project_partition(cmap: jnp.ndarray, parts_coarse: jnp.ndarray) -> jnp.ndarray:
+    """ProjectPartition (Alg 2.1 line 6): fine parts = coarse parts[cmap]."""
+    nc_max = parts_coarse.shape[0]
+    return parts_coarse[jnp.clip(cmap, 0, nc_max - 1)]

@@ -1,0 +1,163 @@
+"""Padded CSR graph container — the core data structure of the Jet partitioner.
+
+TPU discipline: every array has a static (padded) shape; the *true* sizes
+``n`` (vertices) and ``m`` (directed edges) ride along as traced int32
+scalars.  Padding vertices have weight 0 and degree 0; padding edges have
+weight 0 and src/dst 0, so every weighted reduction ignores them for free.
+Count-style reductions must apply :func:`edge_mask` / :func:`vertex_mask`.
+
+The graph stores each undirected edge twice (as in CSR adjacency used by
+Metis/Jet).  ``esrc[e]`` is the source vertex of directed edge ``e`` —
+stored explicitly so edge-parallel kernels avoid a searchsorted per access.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Graph(NamedTuple):
+    """Padded CSR graph. Shapes: xadj (N+1,), adjncy/adjwgt/esrc (M,), vwgt (N,)."""
+
+    xadj: jnp.ndarray    # int32 (N+1,) row offsets; xadj[v+1]==xadj[v] for pads
+    adjncy: jnp.ndarray  # int32 (M,) neighbor (dst) ids; 0 for padding edges
+    adjwgt: jnp.ndarray  # int32 (M,) edge weights; 0 for padding edges
+    vwgt: jnp.ndarray    # int32 (N,) vertex weights; 0 for padding vertices
+    esrc: jnp.ndarray    # int32 (M,) source vertex of each directed edge
+    n: jnp.ndarray       # int32 scalar, true vertex count (n <= N)
+    m: jnp.ndarray       # int32 scalar, true directed edge count (m <= M)
+
+    @property
+    def n_max(self) -> int:
+        return self.vwgt.shape[0]
+
+    @property
+    def m_max(self) -> int:
+        return self.adjncy.shape[0]
+
+    def vertex_mask(self) -> jnp.ndarray:
+        return jnp.arange(self.n_max, dtype=jnp.int32) < self.n
+
+    def edge_mask(self) -> jnp.ndarray:
+        return jnp.arange(self.m_max, dtype=jnp.int32) < self.m
+
+    def degrees(self) -> jnp.ndarray:
+        return self.xadj[1:] - self.xadj[:-1]
+
+    def total_vweight(self) -> jnp.ndarray:
+        return jnp.sum(self.vwgt)
+
+    def total_eweight(self) -> jnp.ndarray:
+        """Sum of undirected edge weights (each edge stored twice)."""
+        return jnp.sum(self.adjwgt) // 2
+
+
+def build_csr_host(
+    n: int,
+    edges: np.ndarray,
+    eweights: np.ndarray | None = None,
+    vweights: np.ndarray | None = None,
+    n_max: int | None = None,
+    m_max: int | None = None,
+) -> Graph:
+    """Host-side CSR builder from an undirected edge list (u, v) pairs.
+
+    Removes self loops, deduplicates parallel edges (summing weights), and
+    symmetrizes.  ``edges`` is (E, 2) int; weights default to 1.
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if eweights is None:
+        eweights = np.ones(edges.shape[0], dtype=np.int64)
+    else:
+        eweights = np.asarray(eweights, dtype=np.int64)
+    # Drop self loops.
+    keep = edges[:, 0] != edges[:, 1]
+    edges, eweights = edges[keep], eweights[keep]
+    # Canonicalize + dedup (sum weights of parallel edges).
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    key = lo * n + hi
+    order = np.argsort(key, kind="stable")
+    key, lo, hi, eweights = key[order], lo[order], hi[order], eweights[order]
+    uniq, inv = np.unique(key, return_inverse=True)
+    w = np.zeros(uniq.shape[0], dtype=np.int64)
+    np.add.at(w, inv, eweights)
+    lo = (uniq // n).astype(np.int64)
+    hi = (uniq % n).astype(np.int64)
+    # Symmetrize.
+    src = np.concatenate([lo, hi])
+    dst = np.concatenate([hi, lo])
+    ew = np.concatenate([w, w])
+    order = np.argsort(src * n + dst, kind="stable")
+    src, dst, ew = src[order], dst[order], ew[order]
+    m = src.shape[0]
+    xadj = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(xadj, src + 1, 1)
+    xadj = np.cumsum(xadj)
+    if vweights is None:
+        vweights = np.ones(n, dtype=np.int64)
+    else:
+        vweights = np.asarray(vweights, dtype=np.int64)
+
+    n_max = int(n_max) if n_max is not None else int(n)
+    m_max = int(m_max) if m_max is not None else int(m)
+    assert n_max >= n and m_max >= m, (n_max, n, m_max, m)
+
+    xadj_p = np.full(n_max + 1, m, dtype=np.int32)
+    xadj_p[: n + 1] = xadj
+    adjncy_p = np.zeros(m_max, dtype=np.int32)
+    adjncy_p[:m] = dst
+    adjwgt_p = np.zeros(m_max, dtype=np.int32)
+    adjwgt_p[:m] = ew
+    vwgt_p = np.zeros(n_max, dtype=np.int32)
+    vwgt_p[:n] = vweights
+    esrc_p = np.zeros(m_max, dtype=np.int32)
+    esrc_p[:m] = src
+    return Graph(
+        xadj=jnp.asarray(xadj_p),
+        adjncy=jnp.asarray(adjncy_p),
+        adjwgt=jnp.asarray(adjwgt_p),
+        vwgt=jnp.asarray(vwgt_p),
+        esrc=jnp.asarray(esrc_p),
+        n=jnp.asarray(n, dtype=jnp.int32),
+        m=jnp.asarray(m, dtype=jnp.int32),
+    )
+
+
+def graph_to_host(g: Graph) -> tuple[int, np.ndarray, np.ndarray, np.ndarray]:
+    """Return (n, edges(u<v), eweights, vweights) on host, unpadded."""
+    n = int(g.n)
+    m = int(g.m)
+    src = np.asarray(g.esrc)[:m]
+    dst = np.asarray(g.adjncy)[:m]
+    w = np.asarray(g.adjwgt)[:m]
+    keep = src < dst
+    return n, np.stack([src[keep], dst[keep]], axis=1), w[keep], np.asarray(g.vwgt)[:n]
+
+
+def validate_host(g: Graph) -> None:
+    """Structural invariants — host-side, for tests."""
+    n, m = int(g.n), int(g.m)
+    xadj = np.asarray(g.xadj)
+    adjncy = np.asarray(g.adjncy)
+    adjwgt = np.asarray(g.adjwgt)
+    esrc = np.asarray(g.esrc)
+    assert xadj[0] == 0 and xadj[n] == m
+    assert np.all(np.diff(xadj[: n + 1]) >= 0)
+    assert np.all(xadj[n:] == m)
+    assert np.all(adjncy[:m] >= 0) and np.all(adjncy[:m] < n)
+    assert np.all(adjwgt[:m] > 0)
+    assert np.all(adjwgt[m:] == 0)
+    # esrc consistent with xadj
+    expect_src = np.repeat(np.arange(n), np.diff(xadj[: n + 1]))
+    assert np.array_equal(esrc[:m], expect_src)
+    # no self loops
+    assert np.all(adjncy[:m] != esrc[:m])
+    # symmetric with equal weights
+    fwd = {}
+    for e in range(m):
+        fwd[(int(esrc[e]), int(adjncy[e]))] = int(adjwgt[e])
+    for (u, v), w in fwd.items():
+        assert fwd.get((v, u)) == w, f"asymmetric edge {(u, v)}"

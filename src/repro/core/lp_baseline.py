@@ -1,0 +1,91 @@
+"""LP refinement variants for the Table 3 ablation + a size-constrained LP
+competitor (the refinement family of Mt-Metis/KaMinPar that the paper groups
+as "Label Propagation", §2.5.1).
+
+Variant matrix (paper §7.1.4):
+  baseline : X = {F >= 0}; commit all of X; no locks
+  locks    : baseline + lock bit
+  weak_ab  : X = {F >= 0}; afterburner second filter
+  full_ab  : X per Eq 4.3 (negative gains admitted); afterburner
+  full     : full_ab + locks   (== Jetlp)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import connectivity as cn
+from repro.core import metrics
+from repro.core.graph import Graph
+
+from repro.core.refine import VARIANTS, jetlp_moves, variant_flags  # noqa: F401  (re-export)
+
+
+@partial(jax.jit, static_argnames=("k", "lam", "iters"))
+def constrained_lp_refine(
+    g: Graph,
+    parts0: jnp.ndarray,
+    k: int,
+    lam: float = 0.03,
+    iters: int = 24,
+):
+    """Size-constrained synchronous LP (the classic competitor, §2.5.1).
+
+    Each iteration: every boundary vertex proposes its best positive-gain
+    move; proposals are admitted per destination part up to the part's
+    remaining headroom (gain-descending, via a (dest, -gain) sorted prefix
+    scan) so the balance constraint is never violated.  Keeps the best seen.
+    """
+    W = g.total_vweight()
+    limit = metrics.size_limit(W, k, lam)
+    vmask = g.vertex_mask()
+    parts0 = jnp.where(vmask, parts0, k).astype(jnp.int32)
+    n_max = g.n_max
+    GAIN_CAP = jnp.int32(1 << 20)
+
+    def body(carry, _):
+        parts, best_parts, best_cost = carry
+        q = cn.dense_queries(g, parts, k)
+        F = q.best_conn - q.conn_self
+        want = vmask & (q.best_conn > 0) & (F > 0)
+        dest = jnp.where(want, q.best_part, k)
+        # admit by descending gain within each destination, up to headroom
+        gain_c = jnp.clip(F, -GAIN_CAP + 1, GAIN_CAP - 1)
+        key = jnp.where(want, dest * (2 * GAIN_CAP) + (GAIN_CAP - gain_c),
+                        jnp.int32(2147483647))
+        order = jnp.argsort(key)
+        want_s = want[order]
+        dseg = jnp.where(want_s, dest[order], k)
+        w_s = jnp.where(want_s, g.vwgt[order], 0)
+        cum = jnp.cumsum(w_s)
+        cum_b = cum - w_s
+        first = jnp.concatenate([jnp.ones((1,), bool), dseg[1:] != dseg[:-1]])
+        off = jnp.zeros((k + 1,), jnp.int32).at[dseg].max(
+            jnp.where(first, cum_b, 0)
+        )
+        within = cum_b - off[dseg]
+        sizes = metrics.part_sizes(g, parts, k)
+        headroom = jnp.maximum(limit - sizes, 0)
+        admit_s = want_s & (within < headroom[jnp.clip(dseg, 0, k - 1)])
+        admit = jnp.zeros((n_max,), bool).at[order].set(admit_s)
+        parts2 = jnp.where(admit, dest, parts)
+        cost2 = metrics.cutsize(g, parts2).astype(jnp.int32)
+        sizes2 = metrics.part_sizes(g, parts2, k)
+        ok2 = jnp.max(sizes2) <= limit
+        take = ok2 & (cost2 < best_cost)
+        return (
+            parts2,
+            jnp.where(take, parts2, best_parts),
+            jnp.where(take, cost2, best_cost),
+        ), None
+
+    cost0 = metrics.cutsize(g, parts0).astype(jnp.int32)
+    sizes0 = metrics.part_sizes(g, parts0, k)
+    bal0 = jnp.max(sizes0) <= limit
+    best0 = jnp.where(bal0, cost0, jnp.int32(2147483647))
+    (parts, best_parts, best_cost), _ = jax.lax.scan(
+        body, (parts0, parts0, best0), None, length=iters
+    )
+    return best_parts, {"best_cost": best_cost}

@@ -1,0 +1,50 @@
+"""Partition quality metrics: cutsize, part sizes, imbalance, boundary."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+
+GHOST = -1  # sentinel meaning "use part id k for padding vertices"
+
+
+def ghost_part(k: int) -> int:
+    """Padding vertices live in part ``k`` (the ghost part)."""
+    return k
+
+
+def cutsize(g: Graph, parts: jnp.ndarray) -> jnp.ndarray:
+    """Sum of weights of cut (undirected) edges. parts: (N,) int32 in [0,k]."""
+    cut = jnp.where(parts[g.esrc] != parts[g.adjncy], g.adjwgt, 0)
+    return jnp.sum(cut) // 2
+
+
+def part_sizes(g: Graph, parts: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Weighted size of each part, (k,). Ghost part dropped."""
+    sizes = jax.ops.segment_sum(g.vwgt, parts, num_segments=k + 1)
+    return sizes[:k]
+
+
+def size_limit(total_w: jnp.ndarray, k: int, lam: float) -> jnp.ndarray:
+    """Max allowed part weight: floor((1+lam) * W / k)."""
+    return jnp.floor((1.0 + lam) * total_w.astype(jnp.float32) / k).astype(jnp.int32)
+
+
+def imbalance(sizes: jnp.ndarray, total_w: jnp.ndarray, k: int) -> jnp.ndarray:
+    """max_p size_p * k / W - 1 (0 == perfectly balanced), float32."""
+    opt = total_w.astype(jnp.float32) / k
+    return jnp.max(sizes).astype(jnp.float32) / jnp.maximum(opt, 1.0) - 1.0
+
+
+def is_balanced(sizes: jnp.ndarray, total_w: jnp.ndarray, k: int, lam: float) -> jnp.ndarray:
+    return jnp.max(sizes) <= size_limit(total_w, k, lam)
+
+
+def boundary_mask(g: Graph, parts: jnp.ndarray) -> jnp.ndarray:
+    """(N,) bool — vertex has >=1 neighbor in a different part."""
+    diff = (parts[g.esrc] != parts[g.adjncy]) & (g.adjwgt > 0)
+    cnt = jax.ops.segment_sum(
+        diff.astype(jnp.int32), g.esrc, num_segments=g.n_max
+    )
+    return (cnt > 0) & g.vertex_mask()

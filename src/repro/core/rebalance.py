@@ -1,0 +1,193 @@
+"""Jetr rebalancing — weak (Alg 4.3) and strong variants, slot bucketing (Eq 4.5).
+
+The paper's GPU bucket insertion uses atomic counters + rho minibuckets; a
+TPU has no equivalent, so we realize the *same partial order* with a stable
+sort on (part, slot) keys, then select eviction prefixes with a segmented
+cumulative sum.  Theorem 4.1's 2x bound depends only on the slot
+quantization, which we keep verbatim — tests/test_properties.py checks it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import connectivity as cn
+from repro.core import metrics
+from repro.core.graph import Graph
+
+NSLOT = 36  # slot(x) in [0, 2+floor(log2(2^31))] = [0, 33]
+
+
+def slot(loss: jnp.ndarray) -> jnp.ndarray:
+    """Eq 4.5: log2 bucketing of the loss value."""
+    lg = jnp.floor(
+        jnp.log2(jnp.maximum(loss.astype(jnp.float32), 1.0))
+    ).astype(jnp.int32)
+    return jnp.where(loss > 0, 2 + lg, jnp.where(loss == 0, 1, 0))
+
+
+def _dest_caps(sizes: jnp.ndarray, limit: jnp.ndarray, total_w: jnp.ndarray, k: int):
+    """Oversized set A, valid-destination set B, and sigma (deadzone top).
+
+    sigma = midpoint of (opt, limit): destinations may fill up to sigma, so
+    a destination can never be pushed past the limit into A by one Jetrs
+    round of size <= limit - sigma.
+    """
+    opt = total_w // k
+    sigma = (limit.astype(jnp.int32) + opt.astype(jnp.int32)) // 2
+    over = sizes > limit
+    valid = (sizes <= sigma) & ~over
+    return over, valid, sigma, opt
+
+
+def _rw_queries(g, parts, k, valid_parts, backend):
+    """Best valid-destination part per vertex: (best_conn, best_part, any)."""
+    if backend == "dense":
+        mat = cn.conn_matrix(g, parts, k)
+        cols = jnp.arange(k + 1, dtype=jnp.int32)
+        colmask = jnp.concatenate([valid_parts, jnp.zeros((1,), bool)])
+        masked = jnp.where(colmask[None, :], mat, -1)
+        best_conn = jnp.max(masked, axis=1)
+        best_part = jnp.argmax(masked, axis=1).astype(jnp.int32)
+        has = best_conn > 0
+        return jnp.maximum(best_conn, 0), jnp.where(has, best_part, k), has
+    # sorted backend
+    run_vertex, run_part, run_conn, valid = cn.sorted_runs(g, parts, k)
+    n_seg = g.n_max + 1
+    pclip = jnp.clip(run_part, 0, k)
+    vp = jnp.concatenate([valid_parts, jnp.zeros((1,), bool)])
+    mask = valid & vp[pclip]
+    best_conn, best_part = cn._seg_argmax_part(
+        run_conn, run_part, run_vertex, mask, n_seg, k
+    )
+    has = best_conn[: g.n_max] > 0
+    return (
+        jnp.maximum(best_conn[: g.n_max], 0),
+        jnp.where(has, best_part[: g.n_max], k).astype(jnp.int32),
+        has,
+    )
+
+
+def _rs_queries(g, parts, k, valid_parts, backend):
+    """Sum and count of connectivity over *adjacent* valid parts per vertex."""
+    if backend == "dense":
+        mat = cn.conn_matrix(g, parts, k)
+        colmask = jnp.concatenate([valid_parts, jnp.zeros((1,), bool)])
+        sel = jnp.where(colmask[None, :], mat, 0)
+        s = jnp.sum(sel, axis=1)
+        cnt = jnp.sum((sel > 0).astype(jnp.int32), axis=1)
+        return s, cnt
+    run_vertex, run_part, run_conn, valid = cn.sorted_runs(g, parts, k)
+    n_seg = g.n_max + 1
+    vp = jnp.concatenate([valid_parts, jnp.zeros((1,), bool)])
+    mask = valid & vp[jnp.clip(run_part, 0, k)]
+    s = jax.ops.segment_sum(
+        jnp.where(mask, run_conn, 0), run_vertex, num_segments=n_seg
+    )[: g.n_max]
+    cnt = jax.ops.segment_sum(
+        jnp.where(mask & (run_conn > 0), 1, 0).astype(jnp.int32),
+        run_vertex,
+        num_segments=n_seg,
+    )[: g.n_max]
+    return s, cnt
+
+
+def _rank_to_part(valid_parts: jnp.ndarray, k: int):
+    """part_of_rank[r] = r-th valid part id; num_valid."""
+    rank = jnp.cumsum(valid_parts.astype(jnp.int32)) - 1
+    num_valid = jnp.sum(valid_parts.astype(jnp.int32))
+    part_of_rank = jnp.zeros((k,), jnp.int32).at[
+        jnp.where(valid_parts, rank, k - 1)
+    ].max(jnp.where(valid_parts, jnp.arange(k, dtype=jnp.int32), 0))
+    return part_of_rank, num_valid
+
+
+def _evict_prefix(g: Graph, parts, k, movable, slots, sizes, limit):
+    """Stable sort by (part, slot); pick per-part prefixes with weight just
+    covering size - limit (Alg 4.3 lines 19-28, Eq 4.4).
+
+    Returns (evict (N,) bool, order (N,), ecum_before (N,) cumulative evicted
+    weight, in sorted space, for the cookie-cutter).
+    """
+    n_max = g.n_max
+    INF = jnp.int32(2147483647)
+    key = jnp.where(movable, parts * NSLOT + slots, INF)
+    order = jnp.argsort(key)  # stable: (part, slot), then vertex id
+    mov_s = movable[order]
+    seg = jnp.where(mov_s, parts[order], k)
+    w_s = jnp.where(mov_s, g.vwgt[order], 0)
+    cum = jnp.cumsum(w_s)
+    cum_before = cum - w_s
+    pos = jnp.arange(n_max, dtype=jnp.int32)
+    first = jnp.concatenate([jnp.ones((1,), bool), seg[1:] != seg[:-1]])
+    part_off = jnp.zeros((k + 1,), jnp.int32).at[seg].max(
+        jnp.where(first, cum_before, 0)
+    )
+    within_before = cum_before - part_off[seg]
+    need = jnp.maximum(sizes - limit, 0)  # weight to shed per part
+    need_s = need[jnp.clip(seg, 0, k - 1)]
+    evict_s = mov_s & (within_before < need_s)
+    evict = jnp.zeros((n_max,), bool).at[order].set(evict_s)
+    # cumulative evicted weight before each sorted position (for Jetrs)
+    ew = jnp.where(evict_s, w_s, 0)
+    ecum_before = jnp.cumsum(ew) - ew
+    return evict, order, evict_s, ecum_before
+
+
+def _common(g: Graph, parts, k, lam):
+    sizes = metrics.part_sizes(g, parts, k)
+    W = g.total_vweight()
+    limit = metrics.size_limit(W, k, lam)
+    over, valid, sigma, opt = _dest_caps(sizes, limit, W, k)
+    vmask = g.vertex_mask()
+    pclip = jnp.clip(parts, 0, k - 1)
+    in_over = over[pclip] & vmask & (parts < k)
+    # weight restriction (paper end of §4.2.2)
+    surplus = (sizes[pclip] - opt).astype(jnp.float32)
+    movable = in_over & (g.vwgt.astype(jnp.float32) <= 1.5 * surplus)
+    return sizes, limit, over, valid, sigma, opt, movable
+
+
+def jetrw_moves(g: Graph, parts, k: int, lam: float, backend: str = "dense"):
+    """Weak rebalancing (Alg 4.3): evictees go to their best valid part."""
+    sizes, limit, over, valid, sigma, opt, movable = _common(g, parts, k, lam)
+    best_conn, best_part, has = _rw_queries(g, parts, k, valid, backend)
+    q = cn.queries(g, parts, k, backend=backend)
+    # fallback destination: pseudo-random valid part (deterministic hash)
+    part_of_rank, num_valid = _rank_to_part(valid, k)
+    vid = jnp.arange(g.n_max, dtype=jnp.uint32)
+    r = ((vid * jnp.uint32(2654435761)) >> jnp.uint32(8)).astype(jnp.int32)
+    r = r % jnp.maximum(num_valid, 1)
+    rand_part = part_of_rank[jnp.clip(r, 0, k - 1)]
+    # last-resort (no valid part at all): smallest part
+    argmin_part = jnp.argmin(sizes).astype(jnp.int32)
+    dest = jnp.where(has, best_part, jnp.where(num_valid > 0, rand_part, argmin_part))
+    loss = q.conn_self - best_conn  # conn to valid dest is best_conn (0 if none)
+    slots = slot(loss)
+    evict, order, evict_s, _ = _evict_prefix(g, parts, k, movable, slots, sizes, limit)
+    return evict, dest.astype(jnp.int32)
+
+
+def jetrs_moves(g: Graph, parts, k: int, lam: float, backend: str = "dense"):
+    """Strong rebalancing: cookie-cutter destination overlay (one shot)."""
+    sizes, limit, over, valid, sigma, opt, movable = _common(g, parts, k, lam)
+    s_conn, cnt = _rs_queries(g, parts, k, valid, backend)
+    q = cn.queries(g, parts, k, backend=backend)
+    mean_conn = jnp.where(cnt > 0, s_conn // jnp.maximum(cnt, 1), 0)
+    loss = q.conn_self - mean_conn  # Eq 4.10 (sign per Alg 4.3 convention)
+    slots = slot(loss)
+    evict, order, evict_s, ecum_before = _evict_prefix(
+        g, parts, k, movable, slots, sizes, limit
+    )
+    # capacities of valid destinations up to sigma
+    cap = jnp.where(valid, jnp.maximum(sigma - sizes, 0), 0)
+    ccap = jnp.cumsum(cap)
+    total_cap = ccap[-1]
+    x = jnp.minimum(ecum_before, jnp.maximum(total_cap - 1, 0))
+    dest_s = jnp.searchsorted(ccap, x, side="right").astype(jnp.int32)
+    dest_s = jnp.clip(dest_s, 0, k - 1)
+    # safety: if total capacity is zero, send to smallest part
+    argmin_part = jnp.argmin(sizes).astype(jnp.int32)
+    dest_s = jnp.where(total_cap > 0, dest_s, argmin_part)
+    dest = jnp.zeros((g.n_max,), jnp.int32).at[order].set(dest_s)
+    return evict, dest

@@ -1,0 +1,214 @@
+"""Jet refinement — Jetlp (Alg 4.2) and the outer driver (Alg 4.1).
+
+Everything here is one jittable ``lax.while_loop`` per level: the paper's
+bulk-synchronous design maps 1:1 onto XLA.  The three iteration kinds
+(Jetlp / weak rebalance / strong rebalance) are ``lax.cond`` branches chosen
+by the balance state, exactly as Alg 4.1 alternates them.
+
+Deviations from the paper are documented in DESIGN.md §6; the functional
+behaviour (filters, afterburner ordering, locking, best-partition tracking
+with the phi tolerance) follows the paper line by line.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import connectivity as cn
+from repro.core import metrics
+from repro.core import rebalance as rb
+from repro.core.graph import Graph
+
+
+VARIANTS = ("baseline", "locks", "weak_ab", "full_ab", "full")
+
+
+def variant_flags(variant: str):
+    """(use_ratio_filter, use_afterburner, use_locks) — Table 3 ablations."""
+    return {
+        "baseline": (False, False, False),
+        "locks": (False, False, True),
+        "weak_ab": (False, True, False),
+        "full_ab": (True, True, False),
+        "full": (True, True, True),
+    }[variant]
+
+
+def jetlp_moves(
+    g: Graph,
+    parts: jnp.ndarray,
+    k: int,
+    lock: jnp.ndarray,
+    c: float,
+    backend: str = "dense",
+    variant: str = "full",
+):
+    """One unconstrained LP pass (Alg 4.2). Returns (move_mask, dest).
+
+    First filter: Eq 4.3 ``-F(v) < floor(c * conn(v, P_s))  or  F(v) >= 0``.
+    Second filter (afterburner): recompute gain against the approximate next
+    state merged under ``ord`` (Eq 4.1), keep non-negative.  ``variant``
+    selects the paper's §7.1.4 ablations (see ``variant_flags``).
+    """
+    use_ratio, use_ab, use_locks = variant_flags(variant)
+    vmask = g.vertex_mask()
+    q = cn.queries(g, parts, k, backend=backend)
+    F = q.best_conn - q.conn_self  # gain of the best single move
+    boundary = q.best_conn > 0
+
+    if use_ratio:
+        thr = jnp.floor(c * q.conn_self.astype(jnp.float32)).astype(jnp.int32)
+        filter1 = (F >= 0) | (-F < thr)  # Eq 4.3 (strict <, floor rounding)
+    else:
+        filter1 = F >= 0
+    X = vmask & boundary & filter1
+    if use_locks:
+        X = X & ~lock
+    Pd = jnp.where(X, q.best_part, parts)
+    if not use_ab:
+        return X, Pd
+
+    # Afterburner: per-edge approximate next state.
+    u, v, w = g.adjncy, g.esrc, g.adjwgt
+    Fu = F[u]
+    Fv = F[v]
+    # ord(u) < ord(v): u moves "first" iff higher priority gain, tie -> smaller id
+    u_first = X[u] & ((Fu > Fv) | ((Fu == Fv) & (u < v)))
+    pu = jnp.where(u_first, Pd[u], parts[u])
+    contrib = w * (
+        (pu == Pd[v]).astype(jnp.int32) - (pu == parts[v]).astype(jnp.int32)
+    )
+    F2 = jax.ops.segment_sum(
+        jnp.where(g.edge_mask() & X[v], contrib, 0), v, num_segments=g.n_max
+    )
+    move = X & (F2 >= 0)
+    return move, Pd
+
+
+class RefineState(NamedTuple):
+    parts: jnp.ndarray
+    best_parts: jnp.ndarray
+    best_cost: jnp.ndarray       # int32 cutsize of best
+    best_maxsize: jnp.ndarray    # int32 max part weight of best
+    best_balanced: jnp.ndarray   # bool
+    lock: jnp.ndarray            # bool (N,) — last Jetlp move set
+    since_best: jnp.ndarray      # int32 iterations since best improved
+    weak_count: jnp.ndarray      # int32 consecutive weak rebalances
+    it: jnp.ndarray              # int32 total iterations
+    lp_iters: jnp.ndarray        # int32 (stats)
+    rb_iters: jnp.ndarray        # int32 (stats)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "k", "lam", "c", "backend", "patience", "max_iter", "b_max", "variant",
+    ),
+)
+def jet_refine(
+    g: Graph,
+    parts0: jnp.ndarray,
+    k: int,
+    lam: float = 0.03,
+    c: float = 0.75,
+    phi: float = 0.999,
+    backend: str = "dense",
+    patience: int = 12,
+    max_iter: int = 200,
+    b_max: int = 2,
+    variant: str = "full",
+):
+    """Alg 4.1. Returns (best_parts, stats dict)."""
+    W = g.total_vweight()
+    limit = metrics.size_limit(W, k, lam)
+    vmask = g.vertex_mask()
+    parts0 = jnp.where(vmask, parts0, k).astype(jnp.int32)
+
+    sizes0 = metrics.part_sizes(g, parts0, k)
+    cost0 = metrics.cutsize(g, parts0)
+    max0 = jnp.max(sizes0)
+    st = RefineState(
+        parts=parts0,
+        best_parts=parts0,
+        best_cost=cost0.astype(jnp.int32),
+        best_maxsize=max0.astype(jnp.int32),
+        best_balanced=max0 <= limit,
+        lock=jnp.zeros((g.n_max,), bool),
+        since_best=jnp.int32(0),
+        weak_count=jnp.int32(0),
+        it=jnp.int32(0),
+        lp_iters=jnp.int32(0),
+        rb_iters=jnp.int32(0),
+    )
+
+    def cond(st: RefineState):
+        return (st.since_best < patience) & (st.it < max_iter)
+
+    def body(st: RefineState):
+        sizes = metrics.part_sizes(g, st.parts, k)
+        balanced = jnp.max(sizes) <= limit
+
+        def do_lp(_):
+            move, dest = jetlp_moves(g, st.parts, k, st.lock, c, backend, variant)
+            parts2 = jnp.where(move, dest, st.parts)
+            return parts2, move, jnp.int32(0), jnp.int32(1), jnp.int32(0)
+
+        def do_rb(_):
+            def weak(_):
+                move, dest = rb.jetrw_moves(g, st.parts, k, lam, backend)
+                return move, dest
+
+            def strong(_):
+                move, dest = rb.jetrs_moves(g, st.parts, k, lam, backend)
+                return move, dest
+
+            move, dest = jax.lax.cond(st.weak_count < b_max, weak, strong, None)
+            parts2 = jnp.where(move, dest, st.parts)
+            # rebalancing does not touch lock state (paper §4.1.3)
+            return parts2, st.lock, st.weak_count + 1, jnp.int32(0), jnp.int32(1)
+
+        parts2, lock2, weak2, dlp, drb = jax.lax.cond(balanced, do_lp, do_rb, None)
+
+        cost2 = metrics.cutsize(g, parts2).astype(jnp.int32)
+        sizes2 = metrics.part_sizes(g, parts2, k)
+        max2 = jnp.max(sizes2).astype(jnp.int32)
+        bal2 = max2 <= limit
+
+        # Best tracking (Alg 4.1 lines 16-23, fixed so a balanced partition
+        # always supersedes an unbalanced best — see DESIGN.md §6).
+        take_bal = bal2 & (~st.best_balanced | (cost2 < st.best_cost))
+        significant = bal2 & (
+            ~st.best_balanced
+            | (cost2.astype(jnp.float32) < phi * st.best_cost.astype(jnp.float32))
+        )
+        take_imb = (~bal2) & (~st.best_balanced) & (max2 < st.best_maxsize)
+        take = take_bal | take_imb
+        reset = significant | take_imb
+
+        return RefineState(
+            parts=parts2,
+            best_parts=jnp.where(take, parts2, st.best_parts),
+            best_cost=jnp.where(take, cost2, st.best_cost),
+            best_maxsize=jnp.where(take, max2, st.best_maxsize),
+            best_balanced=st.best_balanced | bal2,
+            lock=lock2,
+            since_best=jnp.where(reset, jnp.int32(0), st.since_best + 1),
+            weak_count=jnp.where(bal2, jnp.int32(0), weak2),
+            it=st.it + 1,
+            lp_iters=st.lp_iters + dlp,
+            rb_iters=st.rb_iters + drb,
+        )
+
+    st = jax.lax.while_loop(cond, body, st)
+    stats = {
+        "iterations": st.it,
+        "lp_iters": st.lp_iters,
+        "rb_iters": st.rb_iters,
+        "best_cost": st.best_cost,
+        "best_maxsize": st.best_maxsize,
+        "best_balanced": st.best_balanced,
+    }
+    return st.best_parts, stats

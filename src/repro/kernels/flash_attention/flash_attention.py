@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: FlashAttention-style blocked online-softmax attention.
+
+Grid (BH, num_q_blocks, num_kv_blocks), kv innermost so the (acc, m, l)
+running state lives in VMEM scratch across kv steps.  GQA is handled in the
+BlockSpec index map (kv head = q head // group), so grouped KV is never
+materialized.  Causal and sliding-window masks skip fully-masked kv blocks
+via pl.when (no wasted MXU work), and mask partially-covered blocks with
+iota comparisons.
+
+VMEM per step: q (Bq, D) + k, v (Bk, D) + scratch (Bq, D + 2) in f32.
+Bq = Bk = 128 with D <= 256 stays well under 2 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, q_offset: int,
+            bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq + q_offset
+    kv_start = kj * bk
+    # block-level skip tests (static bounds -> traced predicates)
+    skip = jnp.bool_(False)
+    if causal:
+        skip = skip | (kv_start > q_start + bq - 1)
+    if window > 0:
+        skip = skip | (kv_start + bk - 1 <= q_start - window)
+
+    @pl.when(~skip)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (Bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (Bk, D)
+        v = v_ref[0].astype(jnp.float32)                  # (Bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                  # (Bq, Bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        if causal:
+            s = jnp.where(kpos > qpos, NEG_INF, s)
+        if window > 0:
+            s = jnp.where(kpos <= qpos - window, NEG_INF, s)
+        m_prev = m_ref[...]                                # (Bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # rows with everything masked keep m = -inf; exp(-inf - -inf) guard:
+        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        p = jnp.exp(s - m_safe)                            # (Bq, Bk)
+        p = jnp.where(jnp.isneginf(s), 0.0, p)
+        corr = jnp.exp(jnp.where(m_prev == NEG_INF, NEG_INF, m_prev - m_safe))
+        corr = jnp.where(m_prev == NEG_INF, 0.0, corr)     # (Bq, 1)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = corr * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_attention_pallas(
+    q, k, v, causal: bool = True, window: int = 0, q_offset: int = 0,
+    bq: int = 128, bk: int = 128, interpret: bool = True,
+):
+    """q (B, H, Sq, D); k, v (B, Hkv, Skv, D) -> (B, H, Sq, D)."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0
+    group = h // hkv
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, (sq, bq, skv, bk)
+    nq, nk = sq // bq, skv // bk
+    scale = 1.0 / (d ** 0.5)
+
+    qr = q.reshape(b * h, sq, d)
+    kr = k.reshape(b * hkv, skv, d)
+    vr = v.reshape(b * hkv, skv, d)
+
+    def kv_head(bh):
+        return (bh // h) * hkv + (bh % h) // group
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            q_offset=q_offset, bq=bq, bk=bk, nk=nk,
+        ),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, kj: (kv_head(bh), kj, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, kj: (kv_head(bh), kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)

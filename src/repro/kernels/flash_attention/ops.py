@@ -1,0 +1,24 @@
+"""jit'd wrapper: picks the Pallas flash kernel on TPU, the chunked-jnp
+path elsewhere (that path is also what the dry-run lowers — see
+models/attention.py for the chunked online-softmax implementation)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    q_offset: int = 0, bq: int = 128, bk: int = 128,
+                    use_pallas: bool = True):
+    if not use_pallas:
+        return mha_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=not _on_tpu(),
+    )

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: softmax attention with GQA, causal, sliding window."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q, k, v, causal: bool = True, window: int = 0, q_offset: int = 0):
+    """q (B, H, Sq, D); k, v (B, Hkv, Skv, D). H % Hkv == 0.
+
+    window > 0 limits attention to the last `window` kv positions (inclusive
+    of self) — Gemma-style local attention.  q_offset shifts query positions
+    (chunked prefill / decode with a KV cache).
+    """
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = h // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(skv)
+    mask = jnp.zeros((sq, skv), bool)
+    if causal:
+        mask = mask | (kpos[None, :] > qpos[:, None])
+    if window > 0:
+        mask = mask | (kpos[None, :] <= qpos[:, None] - window)
+    s = jnp.where(mask[None, None], -jnp.inf, s)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

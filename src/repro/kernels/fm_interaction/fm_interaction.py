@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: fused FM second-order interaction.
+
+The recsys serving hot path: for each example, reduce its (F, D) field
+embeddings to a scalar via the sum-square trick, fused in one VMEM pass
+(XLA would otherwise materialize the (B, D) squared-sum intermediates in
+HBM between three reductions).
+
+Grid over batch blocks; block shapes (Bb, F, D) chosen so Bb*F*D*4 bytes
+fits VMEM (Bb=256, F=39, D=16 -> 640 KiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(emb_ref, out_ref):
+    e = emb_ref[...].astype(jnp.float32)       # (Bb, F, D)
+    s = jnp.sum(e, axis=1)                     # (Bb, D)
+    sq = jnp.sum(e * e, axis=1)                # (Bb, D)
+    out_ref[...] = (0.5 * jnp.sum(s * s - sq, axis=-1, keepdims=True)).astype(
+        out_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fm_interaction_pallas(emb, block_b: int = 256, interpret: bool = True):
+    b, f, d = emb.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0, (b, block_b)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(b // block_b,),
+        in_specs=[pl.BlockSpec((block_b, f, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=interpret,
+    )(emb)
+    return out[:, 0]

@@ -1,0 +1,25 @@
+"""jit'd wrapper for the FM interaction kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fm_interaction.fm_interaction import fm_interaction_pallas
+from repro.kernels.fm_interaction.ref import fm_interaction_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fm_interaction(emb, block_b: int = 256, use_pallas: bool = True):
+    """emb (B, F, D) -> (B,) second-order FM scores."""
+    if not use_pallas:
+        return fm_interaction_ref(emb)
+    b = emb.shape[0]
+    block_b = min(block_b, b)
+    pad = (-b) % block_b
+    if pad:
+        emb = jnp.pad(emb, ((0, pad), (0, 0), (0, 0)))
+    out = fm_interaction_pallas(emb, block_b=block_b, interpret=not _on_tpu())
+    return out[:b]

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle: FM second-order interaction (Rendle ICDM'10).
+
+score(x) = 0.5 * sum_d [ (sum_f e_fd)^2 - sum_f e_fd^2 ]
+with e (B, F, D) the per-field embedding vectors (already weighted by the
+feature values).  O(F*D) via the sum-square trick vs O(F^2 D) naive.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fm_interaction_ref(emb):
+    e = emb.astype(jnp.float32)  # accumulate in f32 (the trick cancels badly in bf16)
+    s = jnp.sum(e, axis=1)                   # (B, D)
+    sq = jnp.sum(e * e, axis=1)              # (B, D)
+    return 0.5 * jnp.sum(s * s - sq, axis=-1)  # (B,) float32

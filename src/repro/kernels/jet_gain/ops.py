@@ -1,0 +1,59 @@
+"""jit'd public wrapper for the jet_gain kernel.
+
+Chooses the Pallas kernel (interpret=True on CPU, compiled on TPU) and
+provides the CSR->ELL conversion used by the refinement layer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.jet_gain.jet_gain import jet_gain_pallas
+from repro.kernels.jet_gain.ref import jet_gain_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def csr_to_ell(g, max_degree: int | None = None):
+    """Pad CSR adjacency to (N, D). Returns (nbr (N,D), wgt (N,D)).
+
+    Slots beyond a vertex's degree have nbr == N (ghost) and weight 0.
+    """
+    deg = jnp.asarray(g.degrees())
+    d = int(max_degree) if max_degree else int(jnp.max(deg))
+    n = g.n_max
+    slots = jnp.arange(d, dtype=jnp.int32)
+    eidx = g.xadj[:-1, None] + slots[None, :]
+    valid = slots[None, :] < deg[:, None]
+    eidx = jnp.clip(eidx, 0, g.m_max - 1)
+    nbr = jnp.where(valid, g.adjncy[eidx], n)
+    wgt = jnp.where(valid, g.adjwgt[eidx], 0)
+    return nbr, wgt
+
+
+def jet_gain(nbr, wgt, parts, k: int, block_n: int = 256, use_pallas=None):
+    """Fused conn_self / best_part / best_conn (see jet_gain.py).
+
+    ``nbr`` holds neighbor ids; part ids are looked up here (outside the
+    kernel — TPU kernels avoid arbitrary gathers) and the padded ghost id N
+    maps to ghost part k.
+    """
+    n, d = nbr.shape
+    parts_ext = jnp.concatenate([parts, jnp.array([k], jnp.int32)])
+    nbr_parts = parts_ext[jnp.clip(nbr, 0, parts.shape[0])].astype(jnp.int32)
+    nbr_parts = jnp.where(nbr >= parts.shape[0], k, nbr_parts)
+    if use_pallas is None:
+        use_pallas = True
+    if not use_pallas:
+        return jet_gain_ref(nbr_parts, wgt, parts, k)
+    pad = (-n) % block_n
+    if pad:
+        nbr_parts = jnp.pad(nbr_parts, ((0, pad), (0, 0)), constant_values=k)
+        wgt = jnp.pad(wgt, ((0, pad), (0, 0)))
+        parts = jnp.pad(parts, (0, pad), constant_values=k)
+    cs, bp, bc = jet_gain_pallas(
+        nbr_parts, wgt, parts, k, block_n=block_n, interpret=not _on_tpu()
+    )
+    return cs[:n], bp[:n], bc[:n]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the jet_gain kernel.
+
+Inputs (ELL padded adjacency — the TPU-regular layout of CSR, DESIGN.md §2):
+  nbr_parts : (N, D) int32 — part id of each neighbor (k for padding slots)
+  nwgt      : (N, D) int32 — edge weight (0 for padding slots)
+  parts     : (N,)   int32 — current part of each vertex
+  k         : static int — number of parts
+
+Outputs (the Jetlp selection quantities, paper Alg 4.2 lines 3-7):
+  conn_self : (N,) conn(v, P_s(v))
+  best_part : (N,) argmax_{p != P_s(v)} conn(v, p); k if none
+  best_conn : (N,) its connectivity (0 if none)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jet_gain_ref(nbr_parts, nwgt, parts, k: int):
+    n, d = nbr_parts.shape
+    cols = jnp.arange(k + 1, dtype=jnp.int32)
+    # (N, D, k+1) one-hot accumulate -> (N, k+1); memory fine for oracle use
+    onehot = (nbr_parts[:, :, None] == cols[None, None, :]).astype(jnp.int32)
+    mat = jnp.sum(onehot * nwgt[:, :, None], axis=1)
+    rows = jnp.arange(n)
+    conn_self = mat[rows, parts]
+    masked = jnp.where(
+        (cols[None, :] == parts[:, None]) | (cols[None, :] == k), -1, mat
+    )
+    best_part = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    best_conn = jnp.max(masked, axis=1)
+    none = best_conn <= 0
+    return (
+        conn_self.astype(jnp.int32),
+        jnp.where(none, k, best_part).astype(jnp.int32),
+        jnp.where(none, 0, best_conn).astype(jnp.int32),
+    )

@@ -1,0 +1,30 @@
+"""jit'd wrapper for the sorted-segment sum kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce.ref import segment_sum_sorted_ref
+from repro.kernels.segment_reduce.segment_reduce import segment_sum_sorted_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def segment_sum_sorted(data, seg_ids, num_segments: int, block_m: int = 256,
+                       use_pallas: bool = True):
+    """Sorted-segment sum. data (M, F), seg_ids non-decreasing int32.
+
+    Rows with seg_id >= num_segments are dropped (use as padding).
+    """
+    if not use_pallas:
+        return segment_sum_sorted_ref(data, seg_ids, num_segments)
+    m, f = data.shape
+    pad = (-m) % block_m
+    if pad:
+        data = jnp.pad(data, ((0, pad), (0, 0)))
+        seg_ids = jnp.pad(seg_ids, (0, pad), constant_values=num_segments)
+    return segment_sum_sorted_pallas(
+        data, seg_ids, num_segments, block_m=block_m, interpret=not _on_tpu()
+    )

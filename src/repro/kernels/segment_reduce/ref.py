@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for sorted-segment sum."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_sorted_ref(data, seg_ids, num_segments: int):
+    """data (M, F), seg_ids (M,) int32 non-decreasing; rows with seg_id >=
+    num_segments are dropped. Returns (num_segments, F)."""
+    return jax.ops.segment_sum(data, seg_ids, num_segments=num_segments)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: two-phase sorted-segment sum (message-passing primitive).
+
+GNN aggregation and the partitioner's contraction/connectivity all reduce
+values by a sorted key (edges sorted by destination).  A GPU does this with
+atomics; the TPU adaptation turns the inner reduction into an MXU matmul:
+
+phase 1 (this kernel, grid over edge blocks):
+    local run index r = rank of the row's segment *within the block*
+    (0..B-1, computed from sorted-key boundaries), then
+        partials = onehot(r).T @ data          -- (B, F) MXU matmul
+    plus the run -> global segment id table for the block.
+
+phase 2 (ops.py): scatter-add the (num_blocks * B, F) partials into the
+(S, F) output — touches B rows per block instead of every edge, so the
+irregular scatter shrinks by the average segment length.
+
+Rows whose seg_id >= num_segments (padding) are zeroed via the one-hot mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(seg_ref, data_ref, partial_ref, segid_ref, *, block_m: int,
+            num_segments: int):
+    seg = seg_ref[...][:, 0]            # (B,)
+    data = data_ref[...]                # (B, F)
+    b = block_m
+    prev = jnp.concatenate([jnp.full((1,), -1, seg.dtype), seg[:-1]])
+    isfirst = seg != prev
+    local = jnp.cumsum(isfirst.astype(jnp.int32)) - 1          # (B,) in [0,B)
+    valid = seg < num_segments
+    onehot = (
+        (local[:, None] == jnp.arange(b, dtype=jnp.int32)[None, :])
+        & valid[:, None]
+    ).astype(data.dtype)                                        # (B, B)
+    partial_ref[...] = jax.lax.dot_general(
+        onehot, data, (((0,), (0,)), ((), ())),
+        preferred_element_type=data.dtype,
+    )                                                           # (B, F)
+    # run -> global segment id (or num_segments for dead runs)
+    segid = jnp.full((b,), num_segments, jnp.int32).at[
+        jnp.where(valid & isfirst, local, b - 1)
+    ].min(jnp.where(valid & isfirst, seg.astype(jnp.int32), num_segments))
+    segid_ref[...] = segid[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_m", "interpret")
+)
+def segment_sum_sorted_pallas(
+    data, seg_ids, num_segments: int, block_m: int = 256, interpret: bool = True
+):
+    m, f = data.shape
+    assert m % block_m == 0, (m, block_m)
+    nblocks = m // block_m
+    seg2 = seg_ids.astype(jnp.int32).reshape(m, 1)
+    partials, segids = pl.pallas_call(
+        functools.partial(_kernel, block_m=block_m, num_segments=num_segments),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, f), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, f), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, f), data.dtype),
+            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(seg2, data)
+    # phase 2: combine per-block partials (a straddling segment appears in
+    # at most 2 blocks, so this is a short scatter).
+    out = jnp.zeros((num_segments + 1, f), data.dtype)
+    out = out.at[jnp.clip(segids[:, 0], 0, num_segments)].add(partials)
+    return out[:num_segments]

@@ -1,0 +1,264 @@
+"""Loop-aware cost model over compiled (post-SPMD, post-fusion) HLO text.
+
+Why: XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE —
+for scan-over-layers models that undercounts flops by the layer count (we
+measured gemma3 L=2/4/8 all reporting identical flops).  This walker
+multiplies each computation's cost by its loop trip count (read from
+``backend_config={"known_trip_count":{"n":...}}``).
+
+Counting rules:
+  flops          — dot ops: 2 * prod(out_shape) * prod(contracting dims)
+                   (operand shapes are inline in HLO text); elementwise
+                   arithmetic: 1 flop/output element.  Descends into
+                   fusion bodies (dots can live inside fusions).
+  transcendental — exp/log/tanh/... 1/element.
+  bytes          — operand + output bytes of *top-level* ops only: in
+                   post-fusion HLO a fusion's operands/outputs are the real
+                   HBM traffic; fusion internals live in registers/VMEM.
+                   tuple/gte/bitcast/parameter/constant are free.
+  collectives    — output bytes per op kind (all-reduce, all-gather,
+                   reduce-scatter, all-to-all, collective-permute), trip-
+                   count multiplied like everything else.
+
+The numbers are estimates (documented in EXPERIMENTS.md §Roofline), cross-
+validated against cost_analysis on loop-free programs and against analytic
+6*N*D model flops.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+([a-z0-9\-]+)\((.*)$"
+)
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "sign", "remainder", "power",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "logistic",
+                   "sine", "cosine", "expm1", "log1p", "erf", "atan2",
+                   "cbrt"}
+_FREE = {"tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+         "after-all", "partition-id", "replica-id", "iota"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _tensor_bytes(type_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        total += size * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _tensor_elems(type_text: str) -> int:
+    m = _SHAPE_RE.search(type_text)
+    if not m:
+        return 0
+    size = 1
+    for d in m.group(2).split(","):
+        if d:
+            size *= int(d)
+    return size
+
+
+def _split_computations(text: str) -> dict:
+    comps = {}
+    cur_name, cur_lines = None, []
+    for line in text.splitlines():
+        if cur_name is None:
+            # computation headers start at column 0 and end with '{'
+            if line[:1] not in ("", " ", "\t") and line.rstrip().endswith("{"):
+                m = _COMP_START_RE.match(line.strip())
+                if m:
+                    cur_name = m.group(1)
+                    cur_lines = []
+        else:
+            if line.strip() == "}":
+                comps[cur_name] = cur_lines
+                cur_name = None
+            else:
+                cur_lines.append(line)
+    return comps
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(args_text: str):
+    """Operand %names inside the first (...) of the op call."""
+    depth = 0
+    end = len(args_text)
+    for i, ch in enumerate(args_text):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth <= 0:
+                end = i
+                break
+    return _OPERAND_RE.findall(args_text[:end])
+
+
+def _dot_flops(result_type: str, args_text: str, types: dict) -> int:
+    out_elems = _tensor_elems(result_type)
+    lc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", args_text)
+    # lhs type: inline (f32[..] %a) or via the symbol table
+    lhs_type = None
+    inline = _SHAPE_RE.search(args_text.split(",")[0])
+    if inline:
+        lhs_type = inline.group(0)
+    else:
+        names = _operand_names(args_text)
+        if names:
+            lhs_type = types.get(names[0])
+    if lc is None or lhs_type is None:
+        return 2 * out_elems  # degenerate
+    m = _SHAPE_RE.search(lhs_type)
+    lhs_dims = [int(d) for d in m.group(2).split(",") if d] if m else []
+    contract = 1
+    for idx in lc.group(1).split(","):
+        if idx and int(idx) < len(lhs_dims):
+            contract *= lhs_dims[int(idx)]
+    return 2 * out_elems * contract
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = _split_computations(text)
+        self._memo = {}
+        # entry = computation named ENTRY in original text
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        self.entry = m.group(1) if m else next(iter(self.comps))
+
+    def _called(self, args_text: str):
+        """(name, multiplier) pairs for computations invoked by an op."""
+        out = []
+        mb = re.search(r"body=%?([\w.\-]+)", args_text)
+        if mb:
+            trip = 1
+            mt = _TRIP_RE.search(args_text)
+            if mt:
+                trip = int(mt.group(1))
+            out.append((mb.group(1), trip))
+            mc = re.search(r"condition=%?([\w.\-]+)", args_text)
+            if mc:
+                out.append((mc.group(1), trip))
+            return out
+        mf = re.search(r"calls=%?([\w.\-]+)", args_text)
+        if mf:
+            out.append((mf.group(1), 1))
+        mta = re.search(r"to_apply=%?([\w.\-]+)", args_text)
+        if mta:
+            out.append((mta.group(1), 1))
+        mbr = re.search(r"branch_computations=\{([^}]*)\}", args_text)
+        if mbr:
+            for name in mbr.group(1).split(","):
+                out.append((name.strip().lstrip("%"), 1))
+        return out
+
+    def _types(self, comp: str) -> dict:
+        types = {}
+        for line in self.comps.get(comp, ()):
+            m = _OPLINE_RE.match(line)
+            if m:
+                types[m.group(1)] = m.group(2)
+        return types
+
+    def cost(self, comp: str | None = None, _inside_fusion=False) -> dict:
+        comp = comp or self.entry
+        key = (comp, _inside_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        totals = defaultdict(float)
+        types = self._types(comp)
+        for line in self.comps.get(comp, ()):
+            m = _OPLINE_RE.match(line)
+            if not m:
+                continue
+            _, result_type, op, args = m.groups()
+            base = op.replace("-start", "")
+            if op.endswith("-done") or op in _FREE:
+                continue
+            out_bytes = _tensor_bytes(result_type)
+            out_elems = _tensor_elems(result_type)
+            if base in _COLLECTIVES:
+                totals[f"coll_{base}_bytes"] += out_bytes
+                totals[f"coll_{base}_count"] += 1
+                totals["coll_bytes"] += out_bytes
+            if op == "dot":
+                totals["flops"] += _dot_flops(result_type, args, types)
+            elif op == "convolution":
+                totals["flops"] += 2 * out_elems  # not used by our models
+            elif op in _TRANSCENDENTAL:
+                totals["transcendentals"] += out_elems
+                totals["flops"] += out_elems
+            elif op in _ELEMENTWISE or op in ("reduce", "reduce-window"):
+                totals["flops"] += out_elems
+            # bytes: top-level ops only (fusion operands = HBM traffic).
+            # In-place/indexed ops touch only the indexed region, not the
+            # whole operand (a decode step's cache DUS would otherwise be
+            # charged the full multi-GiB cache per layer):
+            if not _inside_fusion:
+                names = _operand_names(args)
+                if op in ("dynamic-slice", "gather"):
+                    operand_bytes = out_bytes  # read region == output
+                elif op == "dynamic-update-slice":
+                    upd = (_tensor_bytes(types.get(names[1], ""))
+                           if len(names) > 1 else out_bytes)
+                    operand_bytes = upd  # read update; write same region
+                    out_bytes = upd
+                elif op == "scatter":
+                    upd = (_tensor_bytes(types.get(names[2], ""))
+                           if len(names) > 2 else out_bytes)
+                    operand_bytes = 2 * upd  # read region + updates
+                    out_bytes = upd
+                else:
+                    operand_bytes = sum(
+                        _tensor_bytes(types.get(n, "")) for n in names)
+                totals["bytes"] += out_bytes + operand_bytes
+            # descend
+            for name, mult in self._called(args):
+                inner_fusion = _inside_fusion or op == "fusion"
+                sub = self.cost(name, inner_fusion)
+                for k, v in sub.items():
+                    totals[k] += mult * v
+        result = dict(totals)
+        self._memo[key] = result
+        return result
+
+
+def analyze_hlo(text: str) -> dict:
+    c = HloCost(text).cost()
+    out = {
+        "flops": c.get("flops", 0.0),
+        "transcendentals": c.get("transcendentals", 0.0),
+        "bytes": c.get("bytes", 0.0),
+        "collective_bytes": c.get("coll_bytes", 0.0),
+        "collectives": {},
+    }
+    for kind in _COLLECTIVES:
+        b = c.get(f"coll_{kind}_bytes", 0.0)
+        n = c.get(f"coll_{kind}_count", 0.0)
+        if n:
+            out["collectives"][kind] = {"bytes": b, "count": n}
+    return out

@@ -1,0 +1,197 @@
+"""Per-family sharding rules (GSPMD partition specs by parameter path).
+
+LM: 2D FSDP+TP — d_model sharded over 'data', heads/ffn/vocab/experts over
+'model'; 'pod' (when present) is pure DP (params replicated across pods,
+gradients all-reduced over DCN).  KV caches shard batch over data and
+sequence over model (FlashDecoding-style split-K when batch is small).
+
+GNN (baseline mode): params replicated; node/edge arrays sharded over all
+mesh axes.  RecSys: embedding table sharded over (data, model) rows.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_param_sharding(mesh, params_shape):
+    dp = "data"
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name.endswith("embed"):
+            return _ns(mesh, "model", dp)
+        if "moe/router" in name:
+            return _ns(mesh, None, dp, None)
+        if "moe/shared/w_down" in name:
+            return _ns(mesh, None, "model", dp)
+        if "moe/shared" in name:
+            return _ns(mesh, None, dp, "model")
+        if "moe/w_down" in name:                      # (L, E, f, d)
+            return _ns(mesh, None, "model", None, dp)
+        if "moe/" in name:                            # (L, E, d, f)
+            return _ns(mesh, None, "model", dp, None)
+        if name.endswith(("wq", "wk", "wv")):
+            return _ns(mesh, None, dp, "model")
+        if name.endswith("w_dkv"):                    # (L, d, r) — r replicated
+            return _ns(mesh, None, dp, None)
+        if name.endswith("w_ukv"):                    # (L, r, H*(nope+dv))
+            return _ns(mesh, None, None, "model")
+        if name.endswith(("wo", "w_down")):           # (L, in, d)
+            return _ns(mesh, None, "model", dp)
+        if name.endswith(("w_gate", "w_up")):         # (L, d, ff)
+            return _ns(mesh, None, dp, "model")
+        if nd <= 2:                                   # norms, scalars
+            return _ns(mesh)
+        return _ns(mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def lm_param_sharding_zero1(mesh, params_shape):
+    """ZeRO-1: params replicated over 'data' (sharded over 'model' only);
+    optimizer state keeps the full 2D FSDP sharding.  Weight all-gathers
+    disappear; the per-step cost becomes one param-sized broadcast when the
+    2D-sharded update is applied (GSPMD inserts it at the adamw subtract).
+    """
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name.endswith("embed"):
+            return _ns(mesh, "model", None)
+        if "moe/router" in name:
+            return _ns(mesh, None, None, None)
+        if "moe/shared/w_down" in name:
+            return _ns(mesh, None, "model", None)
+        if "moe/shared" in name:
+            return _ns(mesh, None, None, "model")
+        if "moe/w_down" in name:
+            return _ns(mesh, None, "model", None, None)
+        if "moe/" in name:
+            return _ns(mesh, None, "model", None, None)
+        if name.endswith(("wq", "wk", "wv", "w_gate", "w_up")):
+            return _ns(mesh, None, None, "model")
+        if name.endswith("w_dkv"):
+            return _ns(mesh, None, None, None)
+        if name.endswith("w_ukv"):
+            return _ns(mesh, None, None, "model")
+        if name.endswith(("wo", "w_down")):
+            return _ns(mesh, None, "model", None)
+        return _ns(mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def lm_batch_sharding(mesh):
+    dp = dp_axes(mesh)
+    return {"tokens": _ns(mesh, dp, None), "labels": _ns(mesh, dp, None)}
+
+
+def lm_cache_sharding(mesh, cache_shape, batch: int):
+    """KV caches: batch over dp when divisible, else sequence over all axes.
+
+    GQA cache leaves: (L, B, Hkv, S, Dh); MLA: (L, B, S, r).
+    """
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    big_b = batch % dp_size == 0 and batch >= dp_size
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        if name == "len":
+            return _ns(mesh)
+        nd = len(leaf.shape)
+        if nd == 5:  # (L, B, Hkv, S, Dh)
+            if big_b:
+                return _ns(mesh, None, dp, None, "model", None)
+            return _ns(mesh, None, None, None, (*dp, "model"), None)
+        if nd == 4:  # (L, B, S, r) MLA compressed
+            if big_b:
+                return _ns(mesh, None, dp, "model", None)
+            return _ns(mesh, None, None, (*dp, "model"), None)
+        return _ns(mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def lm_logits_sharding(mesh):
+    return _ns(mesh, dp_axes(mesh), "model")
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_param_sharding(mesh, params_shape):
+    return jax.tree_util.tree_map(lambda _: _ns(mesh), params_shape)
+
+
+def gnn_batch_sharding(mesh, batch_shape):
+    """Node/edge arrays row-sharded over every mesh axis."""
+    all_axes = tuple(mesh.axis_names)
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        nd = len(leaf.shape)
+        if name.endswith(("senders", "receivers", "graph_id")):
+            return _ns(mesh, all_axes)
+        if name.endswith(("node_feat", "pos")):
+            return _ns(mesh, all_axes, None)
+        if name.endswith(("labels",)) and nd == 1:
+            return _ns(mesh, all_axes)
+        if name.endswith("target"):
+            return _ns(mesh, all_axes, None)
+        if name.endswith("energy"):
+            return _ns(mesh)
+        return _ns(mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+def fm_param_sharding(mesh, params_shape):
+    dp = "data"
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        if name.endswith("table"):
+            return _ns(mesh, (dp, "model"), None)
+        if name.endswith("linear"):
+            return _ns(mesh, (dp, "model"))
+        return _ns(mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def fm_batch_sharding(mesh):
+    dp = dp_axes(mesh)
+    return {"ids": _ns(mesh, dp, None), "labels": _ns(mesh, dp)}
+
+
+def opt_sharding_like(param_sharding, mesh):
+    """AdamW state: mu/nu mirror params; step replicated."""
+    return {
+        "mu": param_sharding,
+        "nu": param_sharding,
+        "step": _ns(mesh),
+    }

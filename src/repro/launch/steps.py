@@ -1,0 +1,505 @@
+"""Cell builder: (arch x shape x mesh) -> jit-able step + specs + shardings.
+
+This is the single place where the dry-run, the trainer, and the server get
+their step functions, so the compiled artifact is identical across them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import Arch
+from repro.launch import sharding as sh
+from repro.launch.mesh import dp_axes
+from repro.models import transformer as tf
+from repro.models.gnn import graphsage, meshgraphnet, nequip, schnet
+from repro.models.gnn.common import GraphBatch
+from repro.models.recsys import fm as fm_lib
+from repro.optim import adamw
+
+
+class Cell(NamedTuple):
+    step_fn: Any          # callable(*args)
+    args: tuple           # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple
+    meta: dict            # model_flops, param_count, kind, notes
+
+
+class SkippedCell(Exception):
+    pass
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+GNN_MODULES = {
+    "schnet": schnet,
+    "nequip": nequip,
+    "graphsage-reddit": graphsage,
+    "meshgraphnet": meshgraphnet,
+}
+
+
+# ---------------------------------------------------------------------------
+# model-flops estimates (roofline "useful flops")
+# ---------------------------------------------------------------------------
+
+def lm_model_flops(cfg: tf.LMConfig, shape) -> float:
+    n_active = cfg.active_param_count()
+    if shape["kind"] == "train":
+        tokens = shape["batch"] * shape["seq"]
+        return 6.0 * n_active * tokens
+    if shape["kind"] == "prefill":
+        tokens = shape["batch"] * shape["seq"]
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = shape["batch"]
+    attn = (2.0 * shape["batch"] * shape["seq"] * cfg.n_layers
+            * cfg.n_heads * cfg.qk_dim * 2)
+    return 2.0 * n_active * tokens + attn
+
+
+def gnn_model_flops(arch_id, cfg, shape) -> float:
+    n, e = shape.get("n_nodes", shape.get("pad_nodes", 0)), shape.get(
+        "n_edges", shape.get("pad_edges", 0))
+    if arch_id == "graphsage-reddit":
+        d = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+        fwd = sum(2 * n * d[i] * d[i + 1] * 2 + e * d[i]
+                  for i in range(cfg.n_layers))
+    elif arch_id == "schnet":
+        d, r = cfg.d_hidden, cfg.n_rbf
+        per = 2 * e * (r * d + d * d) + 2 * n * 3 * d * d + e * d
+        fwd = cfg.n_interactions * per + 2 * n * d * (d // 2)
+    elif arch_id == "nequip":
+        c, r = cfg.d_hidden, cfg.n_rbf
+        per = (2 * e * (r * 32 + 32 * cfg.n_paths * c)
+               + e * c * (1 + 3 * 4 + 9 * 2) * 2
+               + 2 * n * (2 * c * c + 3 * c * c + 9 * c * c))
+        fwd = cfg.n_layers * per + 2 * n * c * 16
+    else:  # meshgraphnet
+        d = cfg.d_hidden
+        per = 2 * e * (3 * d * d + d * d) + 2 * n * (2 * d * d + d * d)
+        fwd = cfg.n_layers * per + 2 * n * (cfg.d_in + cfg.d_out) * d
+    return 3.0 * fwd  # fwd + bwd ~ 3x forward
+
+
+def fm_model_flops(cfg, shape) -> float:
+    if shape["kind"] == "retrieval":
+        return 2.0 * shape["n_candidates"] * cfg.embed_dim
+    mult = 6.0 if shape["kind"] == "train" else 2.0
+    return mult * shape["batch"] * cfg.n_fields * cfg.embed_dim
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch: Arch, shape_name: str, mesh, smoke: bool = False,
+             tuning: dict | None = None) -> Cell:
+    tuning = tuning or {}
+    cfg: tf.LMConfig = arch.smoke if smoke else arch.config
+    if "config" in tuning:
+        cfg = dataclasses.replace(cfg, **tuning["config"])
+    shape = arch.shapes[shape_name]
+    if shape is None:
+        raise SkippedCell(arch.skip_notes.get(shape_name, "skipped"))
+    kind = shape["kind"]
+    batch, seq = shape["batch"], shape["seq"]
+    dt = jnp.dtype(cfg.dtype)
+
+    params_sds = jax.eval_shape(partial(tf.init_params, cfg),
+                                jax.random.key(0))
+    zero1 = tuning.get("zero1", False)
+    p_sh = (sh.lm_param_sharding_zero1(mesh, params_sds) if zero1
+            else sh.lm_param_sharding(mesh, params_sds))
+    dp = dp_axes(mesh)
+    meta = {
+        "kind": kind,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "model_flops": lm_model_flops(cfg, shape),
+        "tokens": batch * (seq if kind != "decode" else 1),
+    }
+
+    if kind == "train":
+        opt_cfg = adamw.AdamWConfig()
+        opt_sds = jax.eval_shape(adamw.init_state, params_sds)
+        # ZeRO-1: optimizer state (and accumulated grads) keep the 2D FSDP
+        # sharding even though params are replicated over 'data'
+        grad_sh = sh.lm_param_sharding(mesh, params_sds)
+        o_sh = sh.opt_sharding_like(grad_sh if zero1 else p_sh, mesh)
+        b_sh = sh.lm_batch_sharding(mesh)
+        batch_sds = {
+            "tokens": _sds((batch, seq), jnp.int32),
+            "labels": _sds((batch, seq), jnp.int32),
+        }
+        # gradient accumulation: cap per-microbatch activation working set
+        # (~f32 x ~8 live (tokens/dev, width) buffers) near 8 GiB/device.
+        # MoE dispatch widens the live set by the active expert width.
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        per_dev = max(batch // dp_size, 1)
+        eff_d = cfg.d_model
+        if cfg.moe:
+            eff_d = max(eff_d, (cfg.top_k + cfg.n_shared) * cfg.d_expert)
+        live = per_dev * seq * eff_d * 4 * 8
+        microbatches = 1
+        budget = tuning.get("mb_budget", 8e9)
+        while (live / microbatches > budget and microbatches < per_dev
+               and batch % (dp_size * microbatches * 2) == 0):
+            microbatches *= 2
+        microbatches = tuning.get("microbatches", microbatches)
+        meta["microbatches"] = microbatches
+
+        def train_step(params, opt_state, b):
+            mb = microbatches
+
+            def constrain_grads(g):
+                # ZeRO-1: reduce-scatter each microbatch's grads into the
+                # 2D sharding (instead of keeping them param-replicated)
+                if not zero1:
+                    return g
+                return jax.tree.map(
+                    jax.lax.with_sharding_constraint, g, grad_sh)
+
+            def one(p, tb):
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda pp: tf.loss_fn(cfg, pp, tb), has_aux=True)(p)
+                return loss, constrain_grads(grads)
+
+            if mb == 1:
+                loss, grads = one(params, b)
+            else:
+                bt = {k: v.reshape(mb, batch // mb, seq)
+                      for k, v in b.items()}
+
+                def acc(carry, tb):
+                    loss_sum, g = carry
+                    li, gi = one(params, tb)
+                    g = jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), g, gi)
+                    return (loss_sum + li, constrain_grads(g)), None
+
+                g0 = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                g0 = constrain_grads(g0)
+                (loss_sum, grads), _ = jax.lax.scan(
+                    acc, (jnp.float32(0), g0), bt)
+                loss = loss_sum / mb
+                grads = jax.tree.map(lambda x: x / mb, grads)
+            params, opt_state, om = adamw.apply_updates(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, {"loss": loss, **om}
+
+        return Cell(
+            step_fn=train_step,
+            args=(params_sds, opt_sds, batch_sds),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate=(0, 1),
+            meta=meta,
+        )
+
+    if kind == "prefill":
+        tok_sds = _sds((batch, seq), jnp.int32)
+        cache_sds = jax.eval_shape(
+            lambda p, t: tf.prefill(cfg, p, t)[1], params_sds, tok_sds)
+        c_sh = sh.lm_cache_sharding(mesh, cache_sds, batch)
+
+        def prefill_step(params, tokens):
+            return tf.prefill(cfg, params, tokens)
+
+        return Cell(
+            step_fn=prefill_step,
+            args=(params_sds, tok_sds),
+            in_shardings=(p_sh, NamedSharding(mesh, P(dp, None))),
+            out_shardings=(sh.lm_logits_sharding(mesh), c_sh),
+            donate=(),
+            meta=meta,
+        )
+
+    # decode
+    cache_sds = jax.eval_shape(partial(tf.init_cache, cfg, batch, seq))
+    c_sh = sh.lm_cache_sharding(mesh, cache_sds, batch)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    big_b = batch % dp_size == 0 and batch >= dp_size
+    tok_sh = NamedSharding(mesh, P(dp) if big_b else P())
+    logit_sh = NamedSharding(mesh, P(dp if big_b else None, "model"))
+
+    def serve_step(params, cache, tokens):
+        # decode against a (statically) almost-full cache
+        cache = dict(cache, len=jnp.asarray(seq - 1, jnp.int32))
+        return tf.decode_step(cfg, params, cache, tokens)
+
+    return Cell(
+        step_fn=serve_step,
+        args=(params_sds, cache_sds, _sds((batch,), jnp.int32)),
+        in_shardings=(p_sh, c_sh, tok_sh),
+        out_shardings=(logit_sh, c_sh),
+        donate=(1,),
+        meta=meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_shape_config(arch: Arch, shape_name: str, smoke: bool):
+    cfg = arch.smoke if smoke else arch.config
+    shape = arch.shapes[shape_name]
+    if arch.id == "graphsage-reddit":
+        cfg = dataclasses.replace(cfg, d_in=shape["d_feat"])
+    elif arch.id == "meshgraphnet":
+        cfg = dataclasses.replace(cfg, d_in=shape["d_feat"])
+    return cfg, shape
+
+
+def _pad512(x: int) -> int:
+    """Mesh-divisible padding (512 = the largest mesh device count); the
+    models' ghost-index convention makes padded rows inert."""
+    return ((x + 511) // 512) * 512
+
+
+def _gnn_batch_sds(arch_id: str, shape) -> dict:
+    n = _pad512(shape.get("n_nodes", shape.get("pad_nodes")))
+    e = _pad512(shape.get("n_edges", shape.get("pad_edges")))
+    g = shape["n_graphs"]
+    d_feat = shape["d_feat"]
+    molecular = arch_id in ("schnet", "nequip")
+    b = {
+        "node_feat": _sds((n, 1 if molecular else d_feat), jnp.float32),
+        "senders": _sds((e,), jnp.int32),
+        "receivers": _sds((e,), jnp.int32),
+        "pos": _sds((n, 3), jnp.float32),
+        "graph_id": _sds((n,), jnp.int32),
+    }
+    if molecular:
+        b["energy"] = _sds((g,), jnp.float32)
+    elif arch_id == "graphsage-reddit":
+        b["labels"] = _sds((n,), jnp.int32)
+    else:
+        b["target"] = _sds((n, 2), jnp.float32)
+    return b
+
+
+def _gnn_cell(arch: Arch, shape_name: str, mesh, smoke: bool = False,
+              tuning: dict | None = None) -> Cell:
+    tuning = tuning or {}
+    if tuning.get("mode") == "partitioned":
+        from repro.launch.gnn_partitioned import partitioned_gnn_cell
+
+        return partitioned_gnn_cell(arch, shape_name, mesh, smoke, tuning)
+    cfg, shape = _gnn_shape_config(arch, shape_name, smoke)
+    mod = GNN_MODULES[arch.id]
+    n_graphs = shape["n_graphs"]
+    params_sds = jax.eval_shape(partial(mod.init_params, cfg),
+                                jax.random.key(0))
+    p_sh = sh.gnn_param_sharding(mesh, params_sds)
+    opt_cfg = adamw.AdamWConfig()
+    opt_sds = jax.eval_shape(adamw.init_state, params_sds)
+    o_sh = sh.opt_sharding_like(p_sh, mesh)
+    batch_sds = _gnn_batch_sds(arch.id, shape)
+    b_sh = sh.gnn_batch_sharding(mesh, batch_sds)
+
+    def loss(params, b):
+        graph = GraphBatch(
+            node_feat=b["node_feat"], senders=b["senders"],
+            receivers=b["receivers"], edge_feat=None, pos=b["pos"],
+            graph_id=b["graph_id"], n_graphs=n_graphs)
+        if arch.id in ("schnet", "nequip"):
+            payload = {"graph": graph, "energy": b["energy"]}
+        elif arch.id == "graphsage-reddit":
+            payload = {"graph": graph, "labels": b["labels"]}
+        else:
+            payload = {"graph": graph, "target": b["target"]}
+        return mod.loss_fn(cfg, params, payload)
+
+    def train_step(params, opt_state, b):
+        (l, metrics), grads = jax.value_and_grad(
+            loss, has_aux=True)(params, b)
+        params, opt_state, om = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": l, **om}
+
+    return Cell(
+        step_fn=train_step,
+        args=(params_sds, opt_sds, batch_sds),
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate=(0, 1),
+        meta={
+            "kind": "train",
+            "param_count": cfg.param_count(),
+            "active_param_count": cfg.param_count(),
+            "model_flops": gnn_model_flops(arch.id, cfg, shape),
+            "tokens": shape.get("n_nodes", shape.get("pad_nodes")),
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def _fm_cell(arch: Arch, shape_name: str, mesh, smoke: bool = False) -> Cell:
+    cfg: fm_lib.FMConfig = arch.smoke if smoke else arch.config
+    shape = arch.shapes[shape_name]
+    kind = shape["kind"]
+    params_sds = jax.eval_shape(partial(fm_lib.init_params, cfg),
+                                jax.random.key(0))
+    p_sh = sh.fm_param_sharding(mesh, params_sds)
+    dp = dp_axes(mesh)
+    all_axes = tuple(mesh.axis_names)
+    meta = {
+        "kind": kind,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.param_count(),
+        "model_flops": fm_model_flops(cfg, shape),
+        "tokens": shape.get("batch", 1),
+    }
+
+    if kind == "train":
+        b = shape["batch"]
+        opt_cfg = adamw.AdamWConfig()
+        opt_sds = jax.eval_shape(adamw.init_state, params_sds)
+        o_sh = sh.opt_sharding_like(p_sh, mesh)
+        batch_sds = {"ids": _sds((b, cfg.n_fields), jnp.int32),
+                     "labels": _sds((b,), jnp.float32)}
+
+        def train_step(params, opt_state, batch):
+            (l, metrics), grads = jax.value_and_grad(
+                lambda p: fm_lib.loss_fn(cfg, p, batch), has_aux=True)(params)
+            params, opt_state, om = adamw.apply_updates(
+                opt_cfg, params, grads, opt_state)
+            return params, opt_state, {"loss": l, **om}
+
+        return Cell(
+            step_fn=train_step,
+            args=(params_sds, opt_sds, batch_sds),
+            in_shardings=(p_sh, o_sh, sh.fm_batch_sharding(mesh)),
+            out_shardings=(p_sh, o_sh, None),
+            donate=(0, 1),
+            meta=meta,
+        )
+
+    if kind == "serve":
+        b = shape["batch"]
+
+        def serve_step(params, ids):
+            return fm_lib.serve(cfg, params, ids)
+
+        return Cell(
+            step_fn=serve_step,
+            args=(params_sds, _sds((b, cfg.n_fields), jnp.int32)),
+            in_shardings=(p_sh, NamedSharding(mesh, P(dp, None))),
+            out_shardings=NamedSharding(mesh, P(dp)),
+            donate=(),
+            meta=meta,
+        )
+
+    # retrieval: one query, 1M candidates. 1e6 divides the dp axes (16/32)
+    # but not the full 256/512-way mesh, so candidates shard over dp only.
+    c = shape["n_candidates"]
+
+    def retrieval_step(params, user_ids, cand_ids):
+        return fm_lib.retrieval_scores(cfg, params, user_ids, cand_ids)
+
+    return Cell(
+        step_fn=retrieval_step,
+        args=(params_sds, _sds((1, cfg.n_fields - 1), jnp.int32),
+              _sds((c,), jnp.int32)),
+        in_shardings=(p_sh, NamedSharding(mesh, P()),
+                      NamedSharding(mesh, P(dp))),
+        out_shardings=NamedSharding(mesh, P(dp)),
+        donate=(),
+        meta=meta,
+    )
+
+
+def smoke_shapes(arch: Arch) -> dict:
+    """Reduced shapes for CPU smoke tests (one step per shape kind)."""
+    if arch.family == "lm":
+        return {
+            "train_4k": {"kind": "train", "seq": 64, "batch": 2},
+            "prefill_32k": {"kind": "prefill", "seq": 64, "batch": 2},
+            "decode_32k": {"kind": "decode", "seq": 64, "batch": 2},
+            "long_500k": (None if arch.shapes.get("long_500k") is None else
+                          {"kind": "decode", "seq": 128, "batch": 1}),
+        }
+    if arch.family == "gnn":
+        return {
+            "full_graph_sm": {"kind": "train", "n_nodes": 128, "n_edges": 512,
+                              "d_feat": 16, "n_graphs": 1},
+            "minibatch_lg": {"kind": "train", "pad_nodes": 256,
+                             "pad_edges": 512, "d_feat": 16, "n_graphs": 1,
+                             "batch_nodes": 16, "fanout": (5, 5),
+                             "full_nodes": 0, "full_edges": 0},
+            "ogb_products": {"kind": "train", "n_nodes": 256, "n_edges": 1024,
+                             "d_feat": 16, "n_graphs": 1},
+            "molecule": {"kind": "train", "n_nodes": 4 * 10, "n_edges": 4 * 32,
+                         "d_feat": 16, "n_graphs": 4, "atoms": 10},
+        }
+    return {
+        "train_batch": {"kind": "train", "batch": 64},
+        "serve_p99": {"kind": "serve", "batch": 16},
+        "serve_bulk": {"kind": "serve", "batch": 128},
+        "retrieval_cand": {"kind": "retrieval", "batch": 1,
+                           "n_candidates": 256},
+    }
+
+
+def materialize(args, seed: int = 0):
+    """Turn ShapeDtypeStruct trees into runnable arrays (smoke tests)."""
+    key = jax.random.key(seed)
+
+    def one(x):
+        if not hasattr(x, "dtype"):
+            return x
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            return jnp.zeros(x.shape, x.dtype)
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return (jax.random.normal(key, x.shape, jnp.float32) * 0.02
+                    ).astype(x.dtype)
+        return jnp.zeros(x.shape, x.dtype)
+
+    return jax.tree.map(one, args)
+
+
+def materialize_cell(cell: Cell, seed: int = 0):
+    """Cell-aware materialization: optimizer state must be *valid* (zero
+    moments), not random — sqrt(random nu) is NaN."""
+    args = list(materialize(cell.args, seed))
+    if cell.meta["kind"] == "train":
+        args[1] = adamw.init_state(args[0])
+    return tuple(args)
+
+
+def build_cell(arch: Arch, shape_name: str, mesh, smoke: bool = False,
+               tuning: dict | None = None) -> Cell:
+    """``tuning`` carries §Perf hillclimb knobs (microbatches, config
+    overrides, distribution mode) without touching the baseline configs."""
+    if smoke:
+        arch = dataclasses.replace(arch, shapes=smoke_shapes(arch))
+    if shape_name not in arch.shapes:
+        raise KeyError(f"{arch.id} has no shape {shape_name}")
+    if arch.shapes[shape_name] is None:
+        raise SkippedCell(arch.skip_notes.get(shape_name, "skipped"))
+    if arch.family == "lm":
+        return _lm_cell(arch, shape_name, mesh, smoke, tuning)
+    if arch.family == "gnn":
+        return _gnn_cell(arch, shape_name, mesh, smoke, tuning)
+    if arch.family == "recsys":
+        return _fm_cell(arch, shape_name, mesh, smoke)
+    raise ValueError(arch.family)

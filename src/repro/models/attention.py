@@ -1,0 +1,115 @@
+"""Attention implementations: chunked online-softmax (jnp, the dry-run /
+large-shape path, mathematically identical to the Pallas flash kernel) and
+the cached decode path.  GQA, causal, sliding-window, MLA handled here.
+
+Memory discipline (what the 512-device dry-run actually verified):
+  * KV heads are repeated to the full head count *before* the scan — a
+    (B, H, S, D) layout keeps the head axis cleanly sharded over 'model';
+    the (hkv, group) strided view defeats GSPMD propagation and forced
+    involuntary full remats.
+  * The per-chunk step is wrapped in jax.checkpoint, so backward recomputes
+    the (Sq, chunk) probability block instead of saving it: activation
+    memory is O(S) per layer, not O(S^2) — the flash-backward trade made
+    explicit in jnp.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def repeat_kv(k, h: int):
+    """(B, Hkv, S, D) -> (B, H, S, D) by repeating each kv head."""
+    b, hkv, s, d = k.shape
+    if hkv == h:
+        return k
+    return jnp.repeat(k, h // hkv, axis=1)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      chunk: int = 1024):
+    """Flash-style online softmax over kv chunks via lax.scan.
+
+    q (B, H, Sq, D); k, v (B, Hkv, Skv, Dk/Dv) — kv heads repeated here.
+    ``window`` may be a traced scalar (0 = unlimited) so mixed local/global
+    layers share one compiled body.  Never materializes (Sq, Skv).
+    """
+    b, h, sq, d = q.shape
+    k = repeat_kv(k, h)
+    v = repeat_kv(v, h)
+    skv = k.shape[2]
+    dv = v.shape[-1]
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    nchunks = skv // chunk
+    scale = 1.0 / (d ** 0.5)
+    qf = q.astype(jnp.float32) * scale
+    qpos = (jnp.arange(sq, dtype=jnp.int32) + q_offset)[:, None]  # (Sq, 1)
+    window = jnp.asarray(window, jnp.int32)
+
+    @jax.checkpoint
+    def step(carry, inputs):
+        m, l, acc = carry
+        kj, vj, j = inputs
+        s = jnp.einsum("bhqd,bhcd->bhqc", qf, kj.astype(jnp.float32))
+        kpos = (j * chunk + jnp.arange(chunk, dtype=jnp.int32))[None, :]
+        mask = jnp.zeros((sq, chunk), bool)
+        if causal:
+            mask = mask | (kpos > qpos)
+        mask = mask | ((window > 0) & (kpos <= qpos - window))
+        s = jnp.where(mask[None, None], -jnp.inf, s)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(jnp.isneginf(s), 0.0, p)
+        corr = jnp.exp(jnp.where(jnp.isneginf(m), -jnp.inf, m - m_safe))
+        corr = jnp.where(jnp.isneginf(m), 0.0, corr)
+        l_new = corr * l + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = corr * acc + jnp.einsum(
+            "bhqc,bhcd->bhqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    kc = jnp.moveaxis(k.reshape(b, h, nchunks, chunk, d), 2, 0)
+    vc = jnp.moveaxis(v.reshape(b, h, nchunks, chunk, dv), 2, 0)
+    js = jnp.arange(nchunks, dtype=jnp.int32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, js))
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0):
+    """Single-token decode: q (B, H, 1, D); caches (B, Hkv, S, D).
+
+    The cache is NOT repeated to H heads (that would multiply cache reads
+    by the GQA group); the tiny q is viewed as (B, Hkv, group, D) instead.
+    cache_len is the number of valid entries (the new token's kv must
+    already be written at position cache_len - 1).  Linear in S.
+    """
+    b, h, _, d = q.shape
+    _, hkv, s_len, _ = k_cache.shape
+    group = h // hkv
+    scale = 1.0 / (d ** 0.5)
+    # NEVER convert the cache: a bf16->f32 astype gets hoisted out of the
+    # layer scan by XLA, doubling the resident cache (dry-run: +6 GiB/dev
+    # on moonshot decode).  bf16 x bf16 dots accumulate in f32 via
+    # preferred_element_type instead.
+    qg = (q.astype(jnp.float32) * scale).astype(k_cache.dtype).reshape(
+        b, hkv, group, d)
+    sc = jnp.einsum("bhgd,bhsd->bhgs", qg, k_cache,
+                    preferred_element_type=jnp.float32)
+    kpos = jnp.arange(s_len, dtype=jnp.int32)[None, :]
+    qpos = cache_len - 1
+    mask = kpos >= cache_len
+    window = jnp.asarray(window, jnp.int32)
+    mask = mask | ((window > 0) & (kpos <= qpos - window))
+    sc = jnp.where(mask[None, None], -jnp.inf, sc)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, 1, d).astype(q.dtype)

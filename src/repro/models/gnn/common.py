@@ -1,0 +1,89 @@
+"""Shared GNN machinery: padded graph batches + segment message passing.
+
+JAX has no sparse message passing — per the assignment, EmbeddingBag/SpMM
+style aggregation is built from ``jnp.take`` + ``jax.ops.segment_sum`` over
+an edge-index.  Convention: node arrays have N rows; edge indices live in
+[0, N] where N is the ghost node (padding edges point there and are dropped
+by slicing segment outputs to N).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+class GraphBatch(NamedTuple):
+    """Static-shape graph batch.
+
+    senders/receivers: (E,) int32 in [0, N]; N = padding/ghost.
+    node_feat: (N, F) float; pos: (N, 3) or zeros; graph_id: (N,) int32 in
+    [0, G] mapping nodes to molecules/meshes (G = ghost graph for pad nodes).
+    """
+
+    node_feat: jnp.ndarray
+    senders: jnp.ndarray
+    receivers: jnp.ndarray
+    edge_feat: jnp.ndarray | None
+    pos: jnp.ndarray | None
+    graph_id: jnp.ndarray
+    n_graphs: int  # static
+
+
+def scatter_sum(values, index, n: int):
+    """values (E, ...), index (E,) in [0, n] -> (n, ...) (ghost dropped)."""
+    return jax.ops.segment_sum(values, index, num_segments=n + 1)[:n]
+
+
+def scatter_mean(values, index, n: int):
+    s = scatter_sum(values, index, n)
+    cnt = scatter_sum(jnp.ones((values.shape[0],), jnp.float32), index, n)
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {"w": dense_init(k, a, b, dtype), "b": jnp.zeros((b,), dtype)}
+        for k, a, b in zip(ks, dims[:-1], dims[1:])
+    ]
+
+
+def mlp_apply(params, x, act=jax.nn.relu, final_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def rbf_expand(d, n_rbf: int, cutoff: float):
+    """Gaussian radial basis on distances d (E,) -> (E, n_rbf)."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = n_rbf / cutoff
+    return jnp.exp(-gamma * (d[:, None] - centers[None, :]) ** 2)
+
+
+def cosine_cutoff(d, cutoff: float):
+    """Smooth envelope that zeroes messages at the cutoff radius."""
+    x = jnp.clip(d / cutoff, 0.0, 1.0)
+    return 0.5 * (jnp.cos(jnp.pi * x) + 1.0)
+
+
+def edge_vectors(batch: GraphBatch):
+    """(E, 3) displacement, (E,) distance; padding edges give 0/0."""
+    n = batch.node_feat.shape[0]
+    pos = jnp.concatenate([batch.pos, jnp.zeros((1, 3), batch.pos.dtype)], 0)
+    rel = pos[batch.receivers] - pos[batch.senders]
+    dist = jnp.linalg.norm(rel + 1e-12, axis=-1)
+    valid = (batch.senders < n) & (batch.receivers < n)
+    return jnp.where(valid[:, None], rel, 0.0), jnp.where(valid, dist, 0.0), valid
+
+
+def gather_nodes(x, index):
+    """x (N, ...) gathered at (E,) indices in [0, N] (ghost row = zeros)."""
+    xz = jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], 0)
+    return xz[index]

@@ -1,0 +1,163 @@
+"""NequIP-lite (Batzner et al. 2021): E(3)-equivariant interatomic potential.
+
+Faithful pieces: l_max=2 irrep features (scalars, vectors, traceless
+symmetric rank-2 tensors), radial MLP on a Bessel/Gaussian basis, cutoff
+envelope, gated equivariant nonlinearity, per-atom energy readout.
+
+TPU adaptation (DESIGN.md §6): the full Clebsch-Gordan tensor product is
+replaced by the closed-form l<=2 covariant products (dot, cross, outer -
+trace, tensor contraction) — every path below transforms correctly under
+O(3), which tests/test_models_gnn.py verifies with random rotations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.constrain import constrain
+from repro.models.gnn.common import (
+    GraphBatch, cosine_cutoff, edge_vectors, gather_nodes, mlp_apply,
+    mlp_init, rbf_expand, scatter_sum,
+)
+from repro.models.layers import embed_init
+
+_EYE3 = jnp.eye(3)
+
+
+def _y2(rhat):
+    """l=2 spherical tensor: traceless symmetric outer product (E, 3, 3)."""
+    outer = rhat[:, :, None] * rhat[:, None, :]
+    return outer - _EYE3[None] / 3.0
+
+
+def _sym_traceless(t):
+    sym = 0.5 * (t + jnp.swapaxes(t, -1, -2))
+    tr = jnp.trace(sym, axis1=-2, axis2=-1)
+    return sym - tr[..., None, None] * _EYE3 / 3.0
+
+
+@dataclass(frozen=True)
+class NequipConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    d_hidden: int = 32      # channels per irrep
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 20
+    dtype: str = "float32"
+    n_paths: int = 8        # radial outputs per layer (see _interact)
+
+    def param_count(self) -> int:
+        c, r = self.d_hidden, self.n_rbf
+        radial = r * 32 + 32 * (self.n_paths * c)
+        mix = 6 * c * c
+        return (self.n_species * c
+                + self.n_layers * (radial + mix)
+                + c * 16 + 16)
+
+
+def init_params(cfg: NequipConfig, key):
+    ks = jax.random.split(key, 3)
+    c = cfg.d_hidden
+
+    def one_layer(k):
+        k1, k2, k3, k4, k5 = jax.random.split(k, 5)
+        return {
+            "radial": mlp_init(k1, (cfg.n_rbf, 32, cfg.n_paths * c)),
+            "mix_s": mlp_init(k2, (2 * c, c)),
+            "mix_v": mlp_init(k3, (c, c)),     # channel mix of vectors
+            "mix_t": mlp_init(k4, (c, c)),     # channel mix of tensors
+            "gate": mlp_init(k5, (c, 2 * c)),  # gates for V and T
+        }
+
+    layers = jax.vmap(one_layer)(jax.random.split(ks[0], cfg.n_layers))
+    return {
+        "embed": embed_init(ks[1], cfg.n_species, c, jnp.float32),
+        "layers": layers,   # stacked (L, ...) leaves -> scanned
+        "head": mlp_init(ks[2], (c, 16, 1)),
+    }
+
+
+def _interact(cfg, lp, s, V, T, batch, rbf, env, rhat):
+    """One equivariant message-passing layer.
+
+    s (N, C) scalars; V (N, C, 3) vectors; T (N, C, 3, 3) traceless sym.
+    """
+    n, c = s.shape
+    R = mlp_apply(lp["radial"], rbf, act=jax.nn.silu) * env  # (E, P*C)
+    R = R.reshape(R.shape[0], cfg.n_paths, c)                # (E, P, C)
+    s_j = gather_nodes(s, batch.senders)                     # (E, C)
+    V_j = gather_nodes(V, batch.senders)                     # (E, C, 3)
+    T_j = gather_nodes(T, batch.senders)                     # (E, C, 3, 3)
+    y2 = _y2(rhat)                                           # (E, 3, 3)
+
+    # --- covariant products (paths), all O(3)-equivariant:
+    # scalars: l0xl0->l0, l1.Y1->l0, T:Y2->l0
+    m_s = (R[:, 0] * s_j
+           + R[:, 1] * jnp.einsum("eci,ei->ec", V_j, rhat)
+           + R[:, 2] * jnp.einsum("ecij,eij->ec", T_j, y2))
+    # vectors: l0xY1->l1, l1xl0->l1, l1 x Y1 (cross) -> l1, T.Y1->l1
+    m_v = (R[:, 3, :, None] * s_j[:, :, None] * rhat[:, None, :]
+           + R[:, 4, :, None] * V_j
+           + R[:, 5, :, None] * jnp.cross(
+               V_j, jnp.broadcast_to(rhat[:, None, :], V_j.shape))
+           + R[:, 6, :, None] * jnp.einsum("ecij,ej->eci", T_j, rhat))
+    # tensors: l0xY2->l2, sym(V (x) r)->l2
+    m_t = (R[:, 7, :, None, None] * s_j[:, :, None, None] * y2[:, None]
+           + _sym_traceless(
+               R[:, 4, :, None, None]
+               * V_j[:, :, :, None] * rhat[:, None, None, :]))
+
+    ds = scatter_sum(m_s, batch.receivers, n)
+    dV = scatter_sum(m_v, batch.receivers, n)
+    dT = scatter_sum(m_t, batch.receivers, n)
+
+    # --- node update: invariant pathway + gated equivariant channels
+    v_norm = jnp.sqrt(jnp.sum(dV * dV, axis=-1) + 1e-12)     # (N, C) invariant
+    s_new = s + mlp_apply(lp["mix_s"], jnp.concatenate([ds, v_norm], -1),
+                          act=jax.nn.silu)
+    gates = jax.nn.sigmoid(mlp_apply(lp["gate"], s_new))      # (N, 2C)
+    gv, gt = gates[:, :c], gates[:, c:]
+    V_new = V + gv[:, :, None] * jnp.einsum(
+        "ncj,cd->ndj", dV, lp["mix_v"][0]["w"])
+    T_new = T + gt[:, :, None, None] * jnp.einsum(
+        "ncij,cd->ndij", dT, lp["mix_t"][0]["w"])
+    return s_new, V_new, T_new
+
+
+def forward(cfg: NequipConfig, params, batch: GraphBatch):
+    n = batch.node_feat.shape[0]
+    c = cfg.d_hidden
+    z = batch.node_feat[:, 0].astype(jnp.int32)
+    s = params["embed"][jnp.clip(z, 0, cfg.n_species - 1)]
+    V = jnp.zeros((n, c, 3), jnp.float32)
+    T = jnp.zeros((n, c, 3, 3), jnp.float32)
+    rel, dist, valid = edge_vectors(batch)
+    rhat = rel / jnp.maximum(dist, 1e-9)[:, None]
+    rbf = rbf_expand(dist, cfg.n_rbf, cfg.cutoff)
+    env = (cosine_cutoff(dist, cfg.cutoff) * valid)[:, None]
+
+    @jax.checkpoint
+    def layer(carry, lp):
+        s, V, T = carry
+        s = constrain(s, "all", None)
+        V = constrain(V, "all", None, None)
+        T = constrain(T, "all", None, None, None)
+        s, V, T = _interact(cfg, lp, s, V, T, batch, rbf, env, rhat)
+        return (s, V, T), None
+
+    (s, V, T), _ = jax.lax.scan(layer, (s, V, T), params["layers"])
+    atom_e = mlp_apply(params["head"], s, act=jax.nn.silu)[:, 0]
+    return jax.ops.segment_sum(
+        atom_e, batch.graph_id, num_segments=batch.n_graphs + 1
+    )[: batch.n_graphs]
+
+
+def loss_fn(cfg: NequipConfig, params, batch_and_labels):
+    batch, energy = batch_and_labels["graph"], batch_and_labels["energy"]
+    pred = forward(cfg, params, batch)
+    loss = jnp.mean((pred - energy) ** 2)
+    return loss, {"mae": jnp.mean(jnp.abs(pred - energy))}

@@ -1,0 +1,69 @@
+"""Shared NN building blocks (raw-pytree params; no framework deps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16):
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.uniform(key, (d_in, d_out), jnp.float32, -scale, scale)
+            .astype(dtype))
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x (..., S, D) with D even; positions (..., S) int32."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))                  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits, labels, ignore_id: int = -1):
+    """logits (..., V) f32-accumulated CE with masking.
+
+    The gold logit is extracted with a masked sum over V rather than
+    take_along_axis: a gather along a vocab-sharded axis makes GSPMD
+    replicate the full logits tensor (verified in the 512-device dry-run:
+    67 GiB/device for command-r), while the masked sum stays sharded and
+    lowers to a local select + all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    onehot = iota == jnp.maximum(labels, 0)[..., None]
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

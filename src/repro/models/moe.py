@@ -1,0 +1,185 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k, sort-based dispatch.
+
+DeepSeek-V2-Lite / Moonlight family: n_shared always-active experts plus
+n_experts routed with top_k selection and normalized gate weights.
+
+Dispatch is the TPU-idiomatic sort-based scheme with static per-expert
+capacity: flatten (token, choice) pairs, argsort by expert, compute each
+pair's slot within its expert via a segmented rank, gather into a dense
+(E, C, d) batch, run a batched einsum FFN, scatter-add back with gate
+weights.  Tokens over capacity are dropped (standard capacity-factor
+semantics); the router aux loss keeps load balanced.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.constrain import constrain
+from repro.models.layers import dense_init
+
+
+def moe_init(key, d_model: int, d_expert: int, n_experts: int, n_shared: int,
+             dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "w_gate": dense_init(ks[1], d_model, d_expert, dtype)[None].repeat(
+            n_experts, 0),
+        "w_up": dense_init(ks[2], d_model, d_expert, dtype)[None].repeat(
+            n_experts, 0),
+        "w_down": dense_init(ks[3], d_expert, d_model, dtype)[None].repeat(
+            n_experts, 0),
+    }
+    if n_shared > 0:
+        p["shared"] = {
+            "w_gate": dense_init(ks[4], d_model, n_shared * d_expert, dtype),
+            "w_up": dense_init(ks[5], d_model, n_shared * d_expert, dtype),
+            "w_down": dense_init(ks[6], n_shared * d_expert, d_model, dtype),
+        }
+    return p
+
+
+def moe_apply(params, x, *, top_k: int, capacity_factor: float = 1.25,
+              groups: int = 0):
+    """x (T, d) -> (out (T, d), aux_loss scalar).
+
+    groups > 0 splits tokens into G independent dispatch groups (GShard
+    style).  With G = number of data shards, the argsort/scatter run
+    group-locally (no cross-shard resharding of the 6M-element sort) and
+    the only surviving collective is the (G, E, C, d) -> expert-sharded
+    all-to-all.  Capacity is per group, so drop behaviour changes slightly
+    vs the global dispatch (documented; the router aux loss still balances
+    globally via the mean over groups).
+    """
+    if groups > 1:
+        return _moe_apply_grouped(params, x, top_k=top_k,
+                                  capacity_factor=capacity_factor,
+                                  groups=groups)
+    t, d = x.shape
+    e = params["router"].shape[1]
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)           # (T, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # aux load-balance loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx, e, dtype=jnp.float32).sum(1), axis=0
+    ) / top_k
+    aux = e * jnp.sum(me * ce)
+
+    cap = max(1, int(capacity_factor * t * top_k / e))
+    # flatten (token, choice) pairs and sort by expert
+    flat_e = gate_idx.reshape(-1)                               # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)  # (T*K,)
+    flat_w = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)                                 # stable
+    se, stok, sw = flat_e[order], flat_t[order], flat_w[order]
+    # slot of each pair within its expert
+    pos = jnp.arange(t * top_k, dtype=jnp.int32)
+    isfirst = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+    grp_start = jnp.zeros((e,), jnp.int32).at[se].max(jnp.where(isfirst, pos, 0))
+    slot = pos - grp_start[se]
+    keep = slot < cap
+    # gather tokens into (E, C) index table; dummy rows index t (a zero row)
+    idx = jnp.full((e, cap), t, jnp.int32).at[
+        jnp.where(keep, se, e - 1), jnp.where(keep, slot, cap - 1)
+    ].min(jnp.where(keep, stok, t))
+    wtbl = jnp.zeros((e, cap), jnp.float32).at[
+        jnp.where(keep, se, e - 1), jnp.where(keep, slot, cap - 1)
+    ].max(jnp.where(keep, sw, 0.0))
+    xz = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], 0)
+    xe = constrain(xz[idx], "model", None, None)                # (E, C, d)
+    g = constrain(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"]),
+                  "model", None, None)
+    u = constrain(jnp.einsum("ecd,edf->ecf", xe, params["w_up"]),
+                  "model", None, None)
+    y = constrain(jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                             params["w_down"]), "model", None, None)
+    yw = y.astype(jnp.float32) * wtbl[..., None]
+    out = jnp.zeros((t + 1, d), jnp.float32).at[idx.reshape(-1)].add(
+        yw.reshape(-1, d)
+    )[:t]
+
+    if "shared" in params:
+        sp = params["shared"]
+        gs = constrain(jnp.einsum("td,df->tf", x, sp["w_gate"]),
+                       "batch", "model")
+        us = constrain(jnp.einsum("td,df->tf", x, sp["w_up"]),
+                       "batch", "model")
+        out = out + constrain(
+            jnp.einsum("tf,fd->td", jax.nn.silu(gs) * us, sp["w_down"]),
+            "batch", None).astype(jnp.float32)
+    return out.astype(x.dtype), aux
+
+
+def _moe_apply_grouped(params, x, *, top_k: int, capacity_factor: float,
+                       groups: int):
+    """Group-local dispatch (see moe_apply docstring)."""
+    t, d = x.shape
+    g = groups
+    assert t % g == 0, (t, g)
+    tl = t // g
+    e = params["router"].shape[1]
+    xg = constrain(x.reshape(g, tl, d), "batch", None, None)
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                     # (G, Tl, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)           # (G, Tl, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(gate_idx, e, dtype=jnp.float32).sum(2),
+                  axis=(0, 1)) / top_k
+    aux = e * jnp.sum(me * ce)
+
+    cap = max(1, int(capacity_factor * tl * top_k / e))
+    flat_e = gate_idx.reshape(g, tl * top_k)
+    flat_t = jnp.tile(
+        jnp.repeat(jnp.arange(tl, dtype=jnp.int32), top_k)[None], (g, 1))
+    flat_w = gate_vals.reshape(g, tl * top_k)
+    order = jnp.argsort(flat_e, axis=1)
+    gi = jnp.arange(g, dtype=jnp.int32)[:, None]
+    se = jnp.take_along_axis(flat_e, order, 1)
+    stok = jnp.take_along_axis(flat_t, order, 1)
+    sw = jnp.take_along_axis(flat_w, order, 1)
+    pos = jnp.arange(tl * top_k, dtype=jnp.int32)[None]
+    isfirst = jnp.concatenate(
+        [jnp.ones((g, 1), bool), se[:, 1:] != se[:, :-1]], 1)
+    grp_start = jnp.zeros((g, e), jnp.int32).at[gi, se].max(
+        jnp.where(isfirst, pos, 0))
+    slot = pos - jnp.take_along_axis(grp_start, se, 1)
+    keep = slot < cap
+    idx = jnp.full((g, e, cap), tl, jnp.int32).at[
+        gi, jnp.where(keep, se, e - 1), jnp.where(keep, slot, cap - 1)
+    ].min(jnp.where(keep, stok, tl))
+    wtbl = jnp.zeros((g, e, cap), jnp.float32).at[
+        gi, jnp.where(keep, se, e - 1), jnp.where(keep, slot, cap - 1)
+    ].max(jnp.where(keep, sw, 0.0))
+    xz = jnp.concatenate([xg, jnp.zeros((g, 1, d), x.dtype)], 1)
+    xe = xz[gi[:, :, None], idx]                                # (G, E, C, d)
+    xe = constrain(xe, "batch", "model", None, None)
+    gg = constrain(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]),
+                   "batch", "model", None, None)
+    uu = constrain(jnp.einsum("gecd,edf->gecf", xe, params["w_up"]),
+                   "batch", "model", None, None)
+    y = constrain(jnp.einsum("gecf,efd->gecd", jax.nn.silu(gg) * uu,
+                             params["w_down"]), "batch", "model", None, None)
+    yw = y.astype(jnp.float32) * wtbl[..., None]
+    out = jnp.zeros((g, tl + 1, d), jnp.float32).at[
+        gi[:, :, None], idx
+    ].add(yw)[:, :tl].reshape(t, d)
+    out = constrain(out, "batch", None)
+
+    if "shared" in params:
+        sp = params["shared"]
+        gs = constrain(jnp.einsum("td,df->tf", x, sp["w_gate"]),
+                       "batch", "model")
+        us = constrain(jnp.einsum("td,df->tf", x, sp["w_up"]),
+                       "batch", "model")
+        out = out + constrain(
+            jnp.einsum("tf,fd->td", jax.nn.silu(gs) * us, sp["w_down"]),
+            "batch", None).astype(jnp.float32)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,609 @@
+"""LM transformer family: dense GQA, hybrid local/global (Gemma-3 style),
+MLA + MoE (DeepSeek-V2 family).  Scan-over-layers with stacked params (one
+compiled layer body regardless of depth), optional remat, tied embeddings.
+
+train path   : chunked online-softmax attention (never materializes S x S)
+decode path  : KV cache per layer; MLA uses the compressed c_kv cache with
+               the absorbed-projection trick (the whole point of MLA).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.constrain import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    apply_rope, cross_entropy_loss, dense_init, embed_init, rmsnorm,
+    rmsnorm_init,
+)
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    d_ff: int = 512
+    vocab: int = 1024
+    attn_kind: str = "gqa"        # gqa | mla
+    window: int = 0               # sliding window size for local layers
+    local_ratio: int = 0          # gemma3: 5 (5 local : 1 global)
+    kv_lora_rank: int = 0         # MLA
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    moe: bool = False
+    n_experts: int = 0
+    n_shared: int = 0
+    top_k: int = 0
+    d_expert: int = 0
+    capacity_factor: float = 1.25
+    moe_groups: int = 0           # >1: group-local dispatch (GShard style)
+    aux_loss_coef: float = 0.001
+    rope_theta: float = 10000.0
+    dtype: str = "bfloat16"
+    remat: bool = True
+    attn_chunk: int = 1024
+    seq_parallel: bool = False    # Megatron SP: s-sharded residual stream
+                                  # (psum -> reduce-scatter at wo/w_down)
+    grad_cast: bool = False       # bf16 activation cotangents across layers
+    # which serve shapes are valid (long_* skipped for pure full-attention)
+    supports_long_context: bool = False
+
+    @property
+    def qk_dim(self) -> int:
+        return (self.qk_nope_dim + self.qk_rope_dim
+                if self.attn_kind == "mla" else self.head_dim)
+
+    def window_pattern(self):
+        """(L,) int32 — per-layer sliding window (0 = global)."""
+        import numpy as np
+
+        if self.local_ratio <= 0 or self.window <= 0:
+            return jnp.zeros((self.n_layers,), jnp.int32)
+        pat = np.arange(self.n_layers) % (self.local_ratio + 1)
+        return jnp.asarray(
+            np.where(pat < self.local_ratio, self.window, 0).astype(np.int32)
+        )
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS roofline terms)."""
+        d, L = self.d_model, self.n_layers
+        emb = self.vocab * d
+        if self.attn_kind == "mla":
+            a = (d * self.n_heads * self.qk_dim
+                 + d * (self.kv_lora_rank + self.qk_rope_dim)
+                 + self.kv_lora_rank * self.n_heads
+                 * (self.qk_nope_dim + self.v_head_dim)
+                 + self.n_heads * self.v_head_dim * d)
+        else:
+            a = (d * self.n_heads * self.head_dim
+                 + 2 * d * self.n_kv_heads * self.head_dim
+                 + self.n_heads * self.head_dim * d)
+        if self.moe:
+            f = (d * self.n_experts
+                 + 3 * self.n_experts * d * self.d_expert
+                 + 3 * d * self.n_shared * self.d_expert)
+        else:
+            f = 3 * d * self.d_ff
+        return emb + L * (a + f + 2 * d) + d
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared only)."""
+        if not self.moe:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        full = self.param_count()
+        inactive = (self.n_experts - self.top_k)
+        return full - L * 3 * inactive * d * self.d_expert
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _res_spec(cfg):
+    """Residual-stream sharding: sequence-parallel shards S over 'model',
+    turning the per-layer output all-reduce into a reduce-scatter."""
+    return ("batch", "model", None) if cfg.seq_parallel else (
+        "batch", None, None)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _gcb(x, dtype_str):
+    return x
+
+
+def _gcb_fwd(x, dtype_str):
+    return x, None
+
+
+def _gcb_bwd(dtype_str, _, g):
+    return (g.astype(dtype_str),)
+
+
+_gcb.defvjp(_gcb_fwd, _gcb_bwd)
+
+
+def grad_cast_barrier(x):
+    """Identity forward; downcasts the cotangent to the primal dtype.
+
+    The dry-run HLO showed the layer-scan backward moving activation
+    cotangents as f32 collectives (1 GiB/layer/device on command-r) even
+    though the primal stream is bf16 — this barrier halves backward
+    activation communication (standard bf16-gradient-activations
+    practice).  Enabled via LMConfig.grad_cast."""
+    return _gcb(x, str(x.dtype))
+
+
+def init_params(cfg: LMConfig, key):
+    """Stacked-layer parameter pytree."""
+    dt = _dt(cfg)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+
+    def stack(f, key):
+        ks = jax.random.split(key, cfg.n_layers)
+        return jax.vmap(f)(ks)
+
+    layer = {}
+    if cfg.attn_kind == "mla":
+        layer["wq"] = stack(
+            lambda k: dense_init(k, d, cfg.n_heads * cfg.qk_dim, dt), keys[0])
+        layer["w_dkv"] = stack(
+            lambda k: dense_init(k, d, cfg.kv_lora_rank + cfg.qk_rope_dim, dt),
+            keys[1])
+        layer["w_ukv"] = stack(
+            lambda k: dense_init(
+                k, cfg.kv_lora_rank,
+                cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim), dt),
+            keys[2])
+        layer["wo"] = stack(
+            lambda k: dense_init(k, cfg.n_heads * cfg.v_head_dim, d, dt), keys[3])
+    else:
+        layer["wq"] = stack(
+            lambda k: dense_init(k, d, cfg.n_heads * cfg.head_dim, dt), keys[0])
+        layer["wk"] = stack(
+            lambda k: dense_init(k, d, cfg.n_kv_heads * cfg.head_dim, dt), keys[1])
+        layer["wv"] = stack(
+            lambda k: dense_init(k, d, cfg.n_kv_heads * cfg.head_dim, dt), keys[2])
+        layer["wo"] = stack(
+            lambda k: dense_init(k, cfg.n_heads * cfg.head_dim, d, dt), keys[3])
+    layer["ln1"] = jnp.ones((cfg.n_layers, d), jnp.float32)
+    layer["ln2"] = jnp.ones((cfg.n_layers, d), jnp.float32)
+    if cfg.moe:
+        layer["moe"] = stack(
+            lambda k: moe_lib.moe_init(
+                k, d, cfg.d_expert, cfg.n_experts, cfg.n_shared, dt),
+            keys[4])
+    else:
+        layer["w_gate"] = stack(lambda k: dense_init(k, d, cfg.d_ff, dt), keys[4])
+        layer["w_up"] = stack(lambda k: dense_init(k, d, cfg.d_ff, dt), keys[5])
+        layer["w_down"] = stack(lambda k: dense_init(k, cfg.d_ff, d, dt), keys[6])
+    return {
+        "embed": embed_init(keys[7], cfg.vocab, d, dt),
+        "layers": layer,
+        "final_ln": rmsnorm_init(d),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _gqa_attention(cfg: LMConfig, lp, x, window, positions, return_kv=False):
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,de->bse", x, lp["wq"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x, lp["wk"]).reshape(b, s, hkv, dh)
+    v = jnp.einsum("bsd,de->bse", x, lp["wv"]).reshape(b, s, hkv, dh)
+    q = constrain(q.transpose(0, 2, 1, 3), "batch", "model", None, None)
+    k = constrain(k.transpose(0, 2, 1, 3), "batch", None, None, None)
+    v = constrain(v.transpose(0, 2, 1, 3), "batch", None, None, None)
+    q = apply_rope(q, positions[:, None], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None], cfg.rope_theta)
+    o = attn.chunked_attention(
+        q, k, v, causal=True, window=window, chunk=min(cfg.attn_chunk, s))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+    o = constrain(o, "batch", None, "model")
+    out = constrain(jnp.einsum("bse,ed->bsd", o, lp["wo"]), *_res_spec(cfg))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _mla_attention(cfg: LMConfig, lp, x, window, positions, return_kv=False):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rope, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = jnp.einsum("bsd,de->bse", x, lp["wq"]).reshape(b, s, h, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    ckv_full = jnp.einsum("bsd,de->bse", x, lp["w_dkv"])
+    ckv, k_rope = ckv_full[..., :cfg.kv_lora_rank], ckv_full[..., cfg.kv_lora_rank:]
+    kv = jnp.einsum("bsr,re->bse", ckv, lp["w_ukv"]).reshape(
+        b, s, h, nope + dv)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    q_rope = apply_rope(
+        q_rope.transpose(0, 2, 1, 3), positions[:, None], cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, None], positions[:, None], cfg.rope_theta)
+    k_rope_b = jnp.broadcast_to(k_rope, (b, h, s, rope))
+    qh = constrain(
+        jnp.concatenate([q_nope.transpose(0, 2, 1, 3), q_rope], -1),
+        "batch", "model", None, None)
+    kh = constrain(
+        jnp.concatenate([k_nope.transpose(0, 2, 1, 3), k_rope_b], -1),
+        "batch", "model", None, None)
+    vh = constrain(v.transpose(0, 2, 1, 3), "batch", "model", None, None)
+    o = attn.chunked_attention(
+        qh, kh, vh, causal=True, window=window, chunk=min(cfg.attn_chunk, s))
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * dv)
+    o = constrain(o, "batch", None, "model")
+    out = constrain(jnp.einsum("bse,ed->bsd", o, lp["wo"]), *_res_spec(cfg))
+    if return_kv:
+        return out, (ckv, k_rope[:, 0])
+    return out
+
+
+def forward(cfg: LMConfig, params, tokens):
+    """tokens (B, S) -> (logits (B, S, V) f32, aux_loss)."""
+    b, s = tokens.shape
+    x = constrain(params["embed"][tokens], *_res_spec(cfg))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = cfg.window_pattern()
+
+    def layer_fn(x, scanned):
+        lp, window = scanned
+        if cfg.grad_cast:
+            # place the seq-parallel all-gather on the bf16 primal (GSPMD
+            # otherwise gathers rmsnorm's f32 upcast: 2x the bytes)
+            x = constrain(x, "batch", None, None)
+        h = rmsnorm(x, lp["ln1"])
+        if cfg.attn_kind == "mla":
+            x = x + _mla_attention(cfg, lp, h, window, positions)
+        else:
+            x = x + _gqa_attention(cfg, lp, h, window, positions)
+        h = rmsnorm(x, lp["ln2"])
+        if cfg.moe:
+            y, aux = moe_lib.moe_apply(
+                lp["moe"], h.reshape(b * s, -1), top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, groups=cfg.moe_groups)
+            y = constrain(y.reshape(b, s, -1), *_res_spec(cfg))
+            return x + y, aux
+        y = constrain(jnp.einsum("bsd,df->bsf", h, lp["w_gate"]),
+                      "batch", None, "model")
+        u = constrain(jnp.einsum("bsd,df->bsf", h, lp["w_up"]),
+                      "batch", None, "model")
+        dn = constrain(jnp.einsum("bsf,fd->bsd", jax.nn.silu(y) * u,
+                                  lp["w_down"]), *_res_spec(cfg))
+        return x + dn, jnp.float32(0)
+
+    body = layer_fn
+    if cfg.remat:
+        body = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(x, scanned):
+        # Megatron-style sequence parallelism for the remat-saved carry:
+        # the per-layer saved activation shards its sequence dim over
+        # 'model' (40 x 1.07 GiB/device replicated saves would not fit a
+        # 16 GiB chip; sharded saves are 40 x 67 MiB).
+        x = constrain(x, "batch", "model", None)
+        if cfg.grad_cast:
+            x = grad_cast_barrier(x)
+        x, aux = body(x, scanned)
+        return x, aux
+
+    x, auxs = jax.lax.scan(scan_body, x, (params["layers"], windows))
+    x = rmsnorm(x, params["final_ln"])
+    logits = constrain(
+        jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                   params["embed"].astype(jnp.float32)),
+        "batch", None, "model")
+    return logits, jnp.sum(auxs)
+
+
+def hidden_states(cfg: LMConfig, params, tokens):
+    """Transformer trunk -> (final hidden (B, S, D), aux)."""
+    b, s = tokens.shape
+    x = constrain(params["embed"][tokens], *_res_spec(cfg))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = cfg.window_pattern()
+
+    def layer_fn(x, scanned):
+        lp, window = scanned
+        if cfg.grad_cast:
+            # place the seq-parallel all-gather on the bf16 primal (GSPMD
+            # otherwise gathers rmsnorm's f32 upcast: 2x the bytes)
+            x = constrain(x, "batch", None, None)
+        h = rmsnorm(x, lp["ln1"])
+        if cfg.attn_kind == "mla":
+            x = x + _mla_attention(cfg, lp, h, window, positions)
+        else:
+            x = x + _gqa_attention(cfg, lp, h, window, positions)
+        h = rmsnorm(x, lp["ln2"])
+        if cfg.moe:
+            y, aux = moe_lib.moe_apply(
+                lp["moe"], h.reshape(b * s, -1), top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, groups=cfg.moe_groups)
+            y = constrain(y.reshape(b, s, -1), *_res_spec(cfg))
+            return x + y, aux
+        y = constrain(jnp.einsum("bsd,df->bsf", h, lp["w_gate"]),
+                      "batch", None, "model")
+        u = constrain(jnp.einsum("bsd,df->bsf", h, lp["w_up"]),
+                      "batch", None, "model")
+        dn = constrain(jnp.einsum("bsf,fd->bsd", jax.nn.silu(y) * u,
+                                  lp["w_down"]), *_res_spec(cfg))
+        return x + dn, jnp.float32(0)
+
+    body = layer_fn
+    if cfg.remat:
+        body = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(x, scanned):
+        x = constrain(x, "batch", "model", None)
+        if cfg.grad_cast:
+            x = grad_cast_barrier(x)
+        return body(x, scanned)
+
+    x, auxs = jax.lax.scan(scan_body, x, (params["layers"], windows))
+    return rmsnorm(x, params["final_ln"]), jnp.sum(auxs)
+
+
+def loss_fn(cfg: LMConfig, params, batch, loss_chunk: int = 512):
+    """Sequence-chunked CE: the (B, chunk, V) logits block is the only
+    vocab-sized live tensor (rematted, so backward recomputes it too)."""
+    x, aux = hidden_states(cfg, params, batch["tokens"])
+    b, s, d = x.shape
+    labels = batch["labels"]
+    c = min(loss_chunk, s)
+    n = s // c
+    xc = jnp.moveaxis(x.reshape(b, n, c, d), 1, 0)          # (n, B, C, D)
+    lc = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)        # (n, B, C)
+    embed = params["embed"]
+
+    @jax.checkpoint
+    def chunk_ce(carry, inp):
+        nll_sum, cnt = carry
+        xs, ls = inp
+        logits = constrain(
+            jnp.einsum("bcd,vd->bcv", xs.astype(jnp.float32),
+                       embed.astype(jnp.float32)),
+            "batch", None, "model")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.sum(
+            jnp.where(iota == jnp.maximum(ls, 0)[..., None], logits, 0.0),
+            axis=-1)
+        mask = (ls != -1).astype(jnp.float32)
+        return (nll_sum + jnp.sum((logz - gold) * mask),
+                cnt + jnp.sum(mask)), None
+
+    (nll_sum, cnt), _ = jax.lax.scan(
+        chunk_ce, (jnp.float32(0), jnp.float32(0)), (xc, lc))
+    ce = nll_sum / jnp.maximum(cnt, 1.0)
+    return ce + cfg.aux_loss_coef * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(cfg: LMConfig, params, tokens, max_len: int | None = None):
+    """Prefill pass: (last-token logits (B, V), KV cache at len S).
+
+    Emits per-layer caches from the layer scan; never materializes (B, S, V)
+    logits (at 32k x 256k vocab that tensor would be petabytes).
+    """
+    b, s = tokens.shape
+    max_len = max_len or s
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = cfg.window_pattern()
+    dt = _dt(cfg)
+
+    def layer_fn(x, scanned):
+        lp, window = scanned
+        if cfg.grad_cast:
+            # place the seq-parallel all-gather on the bf16 primal (GSPMD
+            # otherwise gathers rmsnorm's f32 upcast: 2x the bytes)
+            x = constrain(x, "batch", None, None)
+        h = rmsnorm(x, lp["ln1"])
+        if cfg.attn_kind == "mla":
+            o, (ckv, k_rope) = _mla_attention(
+                cfg, lp, h, window, positions, return_kv=True)
+            x = x + o
+            kv_out = (_pad_cache(ckv, max_len), _pad_cache(k_rope, max_len))
+        else:
+            o, (k, v) = _gqa_attention(
+                cfg, lp, h, window, positions, return_kv=True)
+            x = x + o
+            kv_out = (_pad_cache(k, max_len, axis=2),
+                      _pad_cache(v, max_len, axis=2))
+        h2 = rmsnorm(x, lp["ln2"])
+        if cfg.moe:
+            y, _ = moe_lib.moe_apply(
+                lp["moe"], h2.reshape(b * s, -1), top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, groups=cfg.moe_groups)
+            x = x + y.reshape(b, s, -1)
+        else:
+            y = constrain(jnp.einsum("bsd,df->bsf", h2, lp["w_gate"]),
+                          "batch", None, "model")
+            u = constrain(jnp.einsum("bsd,df->bsf", h2, lp["w_up"]),
+                          "batch", None, "model")
+            x = x + constrain(jnp.einsum("bsf,fd->bsd", jax.nn.silu(y) * u,
+                                         lp["w_down"]), *_res_spec(cfg))
+        return x, kv_out
+
+    x, caches = jax.lax.scan(layer_fn, x, (params["layers"], windows))
+    x_last = rmsnorm(x[:, -1], params["final_ln"])
+    logits = jnp.einsum("bd,vd->bv", x_last.astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    if cfg.attn_kind == "mla":
+        cache = {"ckv": caches[0], "krope": caches[1],
+                 "len": jnp.asarray(s, jnp.int32)}
+    else:
+        cache = {"k": caches[0], "v": caches[1],
+                 "len": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def _pad_cache(x, max_len: int, axis: int = 1):
+    if x.shape[axis] == max_len:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, max_len - x.shape[axis])
+    return jnp.pad(x, pad)
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    dt = _dt(cfg)
+    L = cfg.n_layers
+    if cfg.attn_kind == "mla":
+        return {
+            "ckv": jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), dt),
+            "krope": jnp.zeros((L, batch, max_len, cfg.qk_rope_dim), dt),
+            "len": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((L, batch, cfg.n_kv_heads, max_len, cfg.head_dim), dt),
+        "v": jnp.zeros((L, batch, cfg.n_kv_heads, max_len, cfg.head_dim), dt),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def _gqa_decode_layer(cfg, lp, h, kc, vc, pos, window):
+    b = h.shape[0]
+    hds, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bd,de->be", h, lp["wq"]).reshape(b, hds, 1, dh)
+    k = jnp.einsum("bd,de->be", h, lp["wk"]).reshape(b, hkv, 1, dh)
+    v = jnp.einsum("bd,de->be", h, lp["wv"]).reshape(b, hkv, 1, dh)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, posb[:, None], cfg.rope_theta)
+    k = apply_rope(k, posb[:, None], cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, pos, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, pos, 0))
+    o = attn.decode_attention(q, kc, vc, pos + 1, window=window)
+    o = o.reshape(b, hds * dh)
+    return jnp.einsum("be,ed->bd", o, lp["wo"]), kc, vc
+
+
+def _mla_decode_layer(cfg, lp, h, ckv_c, krope_c, pos):
+    """Absorbed-projection MLA decode: attention runs in the compressed
+    c_kv space; per-step FLOPs scale with kv_lora_rank, not H * head_dim."""
+    b = h.shape[0]
+    hds = cfg.n_heads
+    nope, rope, dv, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                         cfg.kv_lora_rank)
+    q = jnp.einsum("bd,de->be", h, lp["wq"]).reshape(b, hds, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope[:, :, None], posb[:, None], cfg.rope_theta)[
+        :, :, 0]
+    new = jnp.einsum("bd,de->be", h, lp["w_dkv"])
+    ckv_new, krope_new = new[..., :r], new[..., r:]
+    krope_new = apply_rope(krope_new[:, None, None], posb[:, None],
+                           cfg.rope_theta)[:, 0, 0]
+    ckv_c = jax.lax.dynamic_update_slice(ckv_c, ckv_new[:, None], (0, pos, 0))
+    krope_c = jax.lax.dynamic_update_slice(
+        krope_c, krope_new[:, None], (0, pos, 0))
+    # absorb W_uk into q: (b,h,nope) x (r, h, nope) -> (b, h, r)
+    w_ukv = lp["w_ukv"].reshape(r, hds, nope + dv)
+    w_uk, w_uv = w_ukv[..., :nope], w_ukv[..., nope:]
+    # bf16 dots with f32 accumulation — converting the compressed cache to
+    # f32 would get hoisted out of the layer scan (see decode_attention).
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk,
+                       preferred_element_type=jnp.float32)
+    scale = 1.0 / ((nope + rope) ** 0.5)
+    s_c = jnp.einsum("bhr,bsr->bhs", q_abs.astype(ckv_c.dtype), ckv_c,
+                     preferred_element_type=jnp.float32) * scale
+    s_r = jnp.einsum("bhr,bsr->bhs", q_rope.astype(krope_c.dtype), krope_c,
+                     preferred_element_type=jnp.float32) * scale
+    s = s_c + s_r
+    mask = jnp.arange(ckv_c.shape[1])[None, None, :] > pos
+    s = jnp.where(mask, -jnp.inf, s)
+    p = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhs,bsr->bhr", p.astype(ckv_c.dtype), ckv_c,
+                     preferred_element_type=jnp.float32)  # (b,h,r)
+    o = jnp.einsum("bhr,rhv->bhv", o_c.astype(w_uv.dtype), w_uv,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, hds * dv).astype(h.dtype)
+    return jnp.einsum("be,ed->bd", o, lp["wo"]), ckv_c, krope_c
+
+
+def decode_step(cfg: LMConfig, params, cache, tokens):
+    """One greedy decode step. tokens (B,) int32 -> (logits (B, V), cache).
+
+    The full (L, ...) cache rides in the scan CARRY with per-layer
+    dynamic_update_index_in_dim — carrying it as scan xs/ys double-buffers
+    the multi-GiB cache (xs read + ys write are distinct buffers), which
+    the dry-run showed as an extra full cache copy per device.
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    pos = cache["len"]
+    windows = cfg.window_pattern()
+    lidx = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+    def ffn(lp, x, h):
+        if cfg.moe:
+            y, _ = moe_lib.moe_apply(
+                lp["moe"], h, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor)
+            return x + y
+        y = jnp.einsum("bd,df->bf", h, lp["w_gate"])
+        u = jnp.einsum("bd,df->bf", h, lp["w_up"])
+        return x + jnp.einsum("bf,fd->bd", jax.nn.silu(y) * u, lp["w_down"])
+
+    if cfg.attn_kind == "mla":
+        def layer(carry, scanned):
+            x, ckv_all, krope_all = carry
+            lp, _w, i = scanned
+            h = rmsnorm(x, lp["ln1"])
+            ckv_c = jax.lax.dynamic_index_in_dim(ckv_all, i, 0, False)
+            krope_c = jax.lax.dynamic_index_in_dim(krope_all, i, 0, False)
+            o, ckv_c, krope_c = _mla_decode_layer(
+                cfg, lp, h, ckv_c, krope_c, pos)
+            ckv_all = jax.lax.dynamic_update_index_in_dim(
+                ckv_all, ckv_c, i, 0)
+            krope_all = jax.lax.dynamic_update_index_in_dim(
+                krope_all, krope_c, i, 0)
+            x = x + o
+            h = rmsnorm(x, lp["ln2"])
+            return (ffn(lp, x, h), ckv_all, krope_all), None
+
+        (x, ckv, krope), _ = jax.lax.scan(
+            layer, (x, cache["ckv"], cache["krope"]),
+            (params["layers"], windows, lidx))
+        new_cache = {"ckv": ckv, "krope": krope, "len": pos + 1}
+    else:
+        def layer(carry, scanned):
+            x, k_all, v_all = carry
+            lp, window, i = scanned
+            h = rmsnorm(x, lp["ln1"])
+            kc = jax.lax.dynamic_index_in_dim(k_all, i, 0, False)
+            vc = jax.lax.dynamic_index_in_dim(v_all, i, 0, False)
+            o, kc, vc = _gqa_decode_layer(cfg, lp, h, kc, vc, pos, window)
+            k_all = jax.lax.dynamic_update_index_in_dim(k_all, kc, i, 0)
+            v_all = jax.lax.dynamic_update_index_in_dim(v_all, vc, i, 0)
+            x = x + o
+            h = rmsnorm(x, lp["ln2"])
+            return (ffn(lp, x, h), k_all, v_all), None
+
+        (x, kcs, vcs), _ = jax.lax.scan(
+            layer, (x, cache["k"], cache["v"]),
+            (params["layers"], windows, lidx))
+        new_cache = {"k": kcs, "v": vcs, "len": pos + 1}
+
+    x = rmsnorm(x, params["final_ln"])
+    logits = jnp.einsum("bd,vd->bv", x.astype(jnp.float32),
+                        params["embed"].astype(jnp.float32))
+    return logits, new_cache

@@ -1,0 +1,49 @@
+"""int8 error-feedback gradient compression (1-bit-Adam family, 8-bit here).
+
+For data-parallel all-reduce at 1000+ node scale the gradient traffic is the
+dominant collective; quantizing to int8 with an error-feedback residual cuts
+bytes 4x (vs f32) / 2x (vs bf16) with negligible quality loss.  The
+transform is collective-agnostic: compress -> (all-reduce int8 payloads) ->
+decompress, with the quantization error carried to the next step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, error):
+    """Returns (payload int8 tree, scales tree, new_error tree)."""
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return q, scale, g - deq
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    outs = [one(g, e) for g, e in zip(flat, flat_e)]
+    q = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    s = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    ne = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    return q, s, ne
+
+
+def decompress(payload, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, payload, scales)
+
+
+def compressed_bytes(grads) -> int:
+    """int8 payload + f32 scale per tensor."""
+    return sum(x.size + 4 for x in jax.tree.leaves(grads))
+
+
+def raw_bytes(grads) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(grads))

@@ -1,0 +1,94 @@
+"""Sharded, atomic, elastic checkpointing.
+
+Format: a directory ``step_<N>/`` containing ``arrays.npz`` (flattened
+pytree leaves keyed by path) + ``manifest.json`` (step, shapes, dtypes,
+mesh metadata).  Writes go to ``.tmp-<pid>`` then ``os.replace`` — a crash
+mid-write never corrupts the latest checkpoint.  Restore is *elastic*:
+arrays are saved in full logical shape, so a restart may use a different
+device count/mesh; the caller re-shards with its own NamedSharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + f".tmp-{os.getpid()}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "process_count": jax.process_count(),
+        "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and ".tmp-" not in d]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target_tree, shardings=None):
+    """Rebuild ``target_tree``-shaped pytree from disk.
+
+    ``shardings``: optional matching pytree of jax.sharding.Sharding for
+    elastic re-sharding onto the current mesh.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+    flat = jax.tree_util.tree_flatten_with_path(target_tree)
+    leaves, treedef = jax.tree_util.tree_flatten(target_tree)
+    new_leaves = []
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    for (kpath, leaf), shard in zip(flat[0], shard_leaves):
+        key = "/".join(str(p) for p in kpath)
+        arr = data[key]
+        assert list(arr.shape) == list(leaf.shape), (key, arr.shape, leaf.shape)
+        if shard is not None:
+            new_leaves.append(jax.device_put(arr.astype(leaf.dtype), shard))
+        else:
+            new_leaves.append(np.asarray(arr).astype(leaf.dtype))
+    import jax.numpy as jnp
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [jnp.asarray(x) for x in new_leaves])
+
+
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)

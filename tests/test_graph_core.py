@@ -1,0 +1,120 @@
+"""Graph container, metrics, and connectivity backend tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import connectivity as conn
+from repro.core import metrics
+from repro.core.graph import build_csr_host, graph_to_host, validate_host
+from repro.data import graphs as gen
+
+
+def test_build_csr_dedup_selfloop():
+    # parallel edge (0,1)x2 -> weight 2; self loop dropped
+    edges = np.array([[0, 1], [1, 0], [2, 2], [1, 2]])
+    g = build_csr_host(3, edges)
+    validate_host(g)
+    assert int(g.n) == 3
+    assert int(g.m) == 4  # 2 undirected edges x2 directions
+    assert int(g.total_eweight()) == 3  # w(0,1)=2, w(1,2)=1
+
+
+def test_build_csr_padding():
+    edges = np.array([[0, 1], [1, 2]])
+    g = build_csr_host(3, edges, n_max=8, m_max=16)
+    validate_host(g)
+    assert g.n_max == 8 and g.m_max == 16
+    assert int(jnp.sum(g.vertex_mask())) == 3
+    assert int(jnp.sum(g.edge_mask())) == 4
+    assert int(g.total_vweight()) == 3
+
+
+def test_roundtrip_host():
+    g = gen.grid2d(5, 4)
+    n, edges, ew, vw = graph_to_host(g)
+    g2 = build_csr_host(n, edges, ew, vw)
+    assert np.array_equal(np.asarray(g.xadj), np.asarray(g2.xadj))
+    assert np.array_equal(np.asarray(g.adjncy), np.asarray(g2.adjncy))
+
+
+def test_generators_valid():
+    for name in gen.SUITE:
+        g = gen.suite_graph(name)
+        n, m = int(g.n), int(g.m)
+        assert n > 0 and m > 0
+        xadj = np.asarray(g.xadj)
+        assert xadj[n] == m
+        src = np.asarray(g.esrc)[:m]
+        dst = np.asarray(g.adjncy)[:m]
+        assert np.all(src != dst)
+
+
+def test_cutsize_and_sizes():
+    g = gen.grid2d(4, 4)  # 16 vertices
+    k = 2
+    parts = jnp.asarray((np.arange(16) % 16 >= 8).astype(np.int32))  # rows 0-1 | 2-3
+    cut = int(metrics.cutsize(g, parts))
+    assert cut == 4  # 4 vertical edges between row 1 and row 2
+    sizes = metrics.part_sizes(g, parts, k)
+    assert np.array_equal(np.asarray(sizes), [8, 8])
+    assert float(metrics.imbalance(sizes, g.total_vweight(), k)) == pytest.approx(0.0)
+    assert bool(metrics.is_balanced(sizes, g.total_vweight(), k, 0.03))
+
+
+def test_boundary_mask():
+    g = gen.grid2d(4, 4)
+    parts = jnp.asarray((np.arange(16) >= 8).astype(np.int32))
+    b = np.asarray(metrics.boundary_mask(g, parts))
+    assert set(np.nonzero(b)[0]) == {4, 5, 6, 7, 8, 9, 10, 11}
+
+
+def _brute_queries(g, parts, k):
+    n, m = int(g.n), int(g.m)
+    src = np.asarray(g.esrc)[:m]
+    dst = np.asarray(g.adjncy)[:m]
+    w = np.asarray(g.adjwgt)[:m]
+    p = np.asarray(parts)
+    mat = np.zeros((g.n_max, k + 1), dtype=np.int64)
+    for e in range(m):
+        mat[src[e], p[dst[e]]] += w[e]
+    conn_self = mat[np.arange(g.n_max), p]
+    best_part = np.full(g.n_max, k)
+    best_conn = np.zeros(g.n_max, dtype=np.int64)
+    for v in range(n):
+        row = mat[v].copy()
+        row[p[v]] = -1
+        row[k] = -1
+        bp = int(np.argmax(row))
+        if row[bp] > 0:
+            best_part[v], best_conn[v] = bp, row[bp]
+    return conn_self, best_part, best_conn
+
+
+@pytest.mark.parametrize("backend", ["dense", "sorted"])
+@pytest.mark.parametrize("name", ["grid_64x32", "rmat_12", "smallworld_4k"])
+def test_connectivity_backends_match_bruteforce(backend, name):
+    g = gen.suite_graph(name)
+    k = 7  # odd k to catch modular bugs
+    rng = np.random.default_rng(1)
+    parts = jnp.asarray(rng.integers(0, k, g.n_max).astype(np.int32))
+    q = conn.queries(g, parts, k, backend=backend)
+    cs, bp, bc = _brute_queries(g, parts, k)
+    nm = g.n_max
+    assert np.array_equal(np.asarray(q.conn_self)[:nm], cs)
+    assert np.array_equal(np.asarray(q.best_conn)[:nm], bc)
+    assert np.array_equal(np.asarray(q.best_part)[:nm], bp)
+
+
+def test_backends_agree_padded():
+    g = gen.grid2d(8, 8)
+    n, edges, ew, vw = graph_to_host(g)
+    gp = build_csr_host(n, edges, ew, vw, n_max=100, m_max=300)
+    k = 4
+    rng = np.random.default_rng(2)
+    parts = np.full(100, k, dtype=np.int32)
+    parts[:n] = rng.integers(0, k, n)
+    parts = jnp.asarray(parts)
+    qd = conn.queries(gp, parts, k, backend="dense")
+    qs = conn.queries(gp, parts, k, backend="sorted")
+    for a, b in zip(qd, qs):
+        assert np.array_equal(np.asarray(a)[:n], np.asarray(b)[:n])

@@ -1,0 +1,74 @@
+"""Baseline refinement variants: constrained LP + Table 3 ablation sanity."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics, refine
+from repro.core.lp_baseline import constrained_lp_refine
+from repro.data import graphs as gen
+
+
+def _rand_parts(g, k, seed=0):
+    rng = np.random.default_rng(seed)
+    p = np.full(g.n_max, k, dtype=np.int32)
+    p[: int(g.n)] = rng.integers(0, k, int(g.n))
+    return jnp.asarray(p)
+
+
+def test_constrained_lp_improves_and_respects_balance():
+    g = gen.grid2d(24, 24)
+    k = 4
+    lam = 0.05
+    parts0 = _rand_parts(g, k, seed=4)
+    cut0 = int(metrics.cutsize(g, parts0))
+    parts, info = constrained_lp_refine(g, parts0, k, lam=lam)
+    cut1 = int(metrics.cutsize(g, parts))
+    W = g.total_vweight()
+    sizes = metrics.part_sizes(g, parts, k)
+    assert bool(metrics.is_balanced(sizes, W, k, lam))
+    assert cut1 < cut0
+
+
+def test_jet_escapes_local_minimum_where_clp_is_stuck():
+    """Row-stripes on a k-divisible grid are a strict single-move local
+    minimum (every vertex has F < 0): constrained LP provably cannot move,
+    while Jet's afterburner admits negative-gain moves and escapes — the
+    paper's central design argument (§4.1.1-4.1.2)."""
+    g = gen.grid2d(24, 24)
+    k = 4
+    lam = 0.05
+    parts0 = jnp.where(
+        g.vertex_mask(), jnp.arange(g.n_max, dtype=jnp.int32) % k, k
+    )
+    cut0 = int(metrics.cutsize(g, parts0))
+    lp_parts, _ = constrained_lp_refine(g, parts0, k, lam=lam, iters=40)
+    assert int(metrics.cutsize(g, lp_parts)) == cut0  # stuck, by design
+    jet_parts, _ = refine.jet_refine(g, parts0, k, lam=lam)
+    jet_cut = int(metrics.cutsize(g, jet_parts))
+    assert jet_cut < cut0, f"jet failed to escape local min: {jet_cut} vs {cut0}"
+
+
+def test_jet_beats_constrained_lp_on_mesh():
+    """The paper's core claim in miniature: Jet >= plain size-constrained LP."""
+    g = gen.grid2d(32, 32)
+    k = 4
+    lam = 0.03
+    parts0 = _rand_parts(g, k, seed=9)
+    lp_parts, _ = constrained_lp_refine(g, parts0, k, lam=lam, iters=40)
+    jet_parts, _ = refine.jet_refine(g, parts0, k, lam=lam)
+    lp_cut = int(metrics.cutsize(g, lp_parts))
+    jet_cut = int(metrics.cutsize(g, jet_parts))
+    assert jet_cut <= lp_cut, f"jet {jet_cut} vs clp {lp_cut}"
+
+
+def test_full_jetlp_beats_baseline_variant():
+    """Table 3 directional check on a mesh (where the paper reports the
+    largest component gains): full > baseline."""
+    g = gen.grid2d(32, 32)
+    k = 8
+    lam = 0.03
+    cuts = {}
+    parts0 = _rand_parts(g, k, seed=11)
+    for variant in ("baseline", "full"):
+        parts, _ = refine.jet_refine(g, parts0, k, lam=lam, variant=variant)
+        cuts[variant] = int(metrics.cutsize(g, parts))
+    assert cuts["full"] <= cuts["baseline"], cuts
