@@ -1,23 +1,13 @@
-"""Jet refinement — Jetlp (Alg 4.2) and the outer driver (Alg 4.1).
+"""The seed's per-iteration-rebuild Jet loop, vendored verbatim for A/B
+benchmarking (see bench_refinement.incremental_vs_rebuild's "seed" mode).
 
-Everything here is one jittable ``lax.while_loop`` per level: the paper's
-bulk-synchronous design maps 1:1 onto XLA.  The three iteration kinds
-(Jetlp / weak rebalance / strong rebalance) are ``lax.cond`` branches chosen
-by the balance state, exactly as Alg 4.1 alternates them.
-
-Stateful incremental refinement (DESIGN.md §3): a :class:`~repro.core.
-connectivity.ConnState` — connectivity structure, part sizes, and cutsize —
-is built once per level, threaded through :class:`RefineState` inside the
-loop, and advanced after every move list with Alg 4.4 delta updates.  The
-loop body therefore never rebuilds connectivity or recomputes sizes/cut
-from the parts vector on the default path; ``rebuild_every`` is the
-periodic-full-rebuild escape hatch (1 == the paper's always-rebuild
-fallback, 0 == never).  All three iteration kinds consume the same
-``ConnQueries`` computed once per iteration from the threaded state.
-
-Deviations from the paper are documented in DESIGN.md §6; the functional
-behaviour (filters, afterburner ordering, locking, best-partition tracking
-with the phi tolerance) follows the paper line by line.
+This is the pre-ConnState refinement driver: every iteration rebuilds
+connectivity from scratch inside `jetlp_moves`/`jetrw_moves`/`jetrs_moves`
+and recomputes cutsize and part sizes from the parts vector.  It runs
+against the current core modules (their from-scratch entry points were kept
+backward compatible), so timing it against `refine.jet_refine` isolates
+exactly what the stateful refactor buys per iteration.  Not part of the
+library surface; do not import outside benchmarks.
 """
 from __future__ import annotations
 
@@ -55,7 +45,6 @@ def jetlp_moves(
     c: float,
     backend: str = "dense",
     variant: str = "full",
-    queries: cn.ConnQueries | None = None,
 ):
     """One unconstrained LP pass (Alg 4.2). Returns (move_mask, dest).
 
@@ -63,14 +52,10 @@ def jetlp_moves(
     Second filter (afterburner): recompute gain against the approximate next
     state merged under ``ord`` (Eq 4.1), keep non-negative.  ``variant``
     selects the paper's §7.1.4 ablations (see ``variant_flags``).
-
-    ``queries`` is the shared per-iteration ConnQueries from the threaded
-    state; standalone callers may omit it and pay for a one-off build.
     """
     use_ratio, use_ab, use_locks = variant_flags(variant)
     vmask = g.vertex_mask()
-    q = queries if queries is not None else cn.queries(g, parts, k,
-                                                       backend=backend)
+    q = cn.queries(g, parts, k, backend=backend)
     F = q.best_conn - q.conn_self  # gain of the best single move
     boundary = q.best_conn > 0
 
@@ -105,7 +90,6 @@ def jetlp_moves(
 
 class RefineState(NamedTuple):
     parts: jnp.ndarray
-    conn: cn.ConnState           # threaded connectivity/sizes/cut state
     best_parts: jnp.ndarray
     best_cost: jnp.ndarray       # int32 cutsize of best
     best_maxsize: jnp.ndarray    # int32 max part weight of best
@@ -118,6 +102,12 @@ class RefineState(NamedTuple):
     rb_iters: jnp.ndarray        # int32 (stats)
 
 
+@partial(
+    jax.jit,
+    static_argnames=(
+        "k", "lam", "c", "backend", "patience", "max_iter", "b_max", "variant",
+    ),
+)
 def jet_refine(
     g: Graph,
     parts0: jnp.ndarray,
@@ -130,67 +120,21 @@ def jet_refine(
     max_iter: int = 200,
     b_max: int = 2,
     variant: str = "full",
-    rebuild_every: int = 0,
-    conn0: cn.ConnState | None = None,
-    max_degree: int | None = None,
 ):
-    """Alg 4.1. Returns (best_parts, stats dict).
-
-    Host-side wrapper: normalizes the input partition, builds the per-level
-    ConnState (unless the caller — e.g. the multilevel driver — already owns
-    one), resolves the static ELL width, then enters the jitted loop.
-    """
-    if rebuild_every < 0:
-        raise ValueError(f"rebuild_every must be >= 0, got {rebuild_every}")
-    parts0 = jnp.where(
-        g.vertex_mask(), jnp.asarray(parts0).astype(jnp.int32), k
-    )
-    if conn0 is None:
-        if backend == "ell" and max_degree is None:
-            max_degree = int(jax.device_get(jnp.max(g.degrees())))
-        conn0 = cn.build_state(g, parts0, k, backend, max_degree=max_degree)
-    return _refine_loop(
-        g, parts0, conn0, phi,
-        k=k, lam=lam, c=c, backend=backend, patience=patience,
-        max_iter=max_iter, b_max=b_max, variant=variant,
-        rebuild_every=rebuild_every,
-    )
-
-
-@partial(
-    jax.jit,
-    static_argnames=(
-        "k", "lam", "c", "backend", "patience", "max_iter", "b_max",
-        "variant", "rebuild_every",
-    ),
-)
-def _refine_loop(
-    g: Graph,
-    parts0: jnp.ndarray,
-    conn0: cn.ConnState,
-    phi,
-    *,
-    k: int,
-    lam: float,
-    c: float,
-    backend: str,
-    patience: int,
-    max_iter: int,
-    b_max: int,
-    variant: str,
-    rebuild_every: int,
-):
+    """Alg 4.1. Returns (best_parts, stats dict)."""
     W = g.total_vweight()
     limit = metrics.size_limit(W, k, lam)
+    vmask = g.vertex_mask()
+    parts0 = jnp.where(vmask, parts0, k).astype(jnp.int32)
 
-    cost0 = conn0.cut
-    max0 = jnp.max(conn0.sizes).astype(jnp.int32)
+    sizes0 = metrics.part_sizes(g, parts0, k)
+    cost0 = metrics.cutsize(g, parts0)
+    max0 = jnp.max(sizes0)
     st = RefineState(
         parts=parts0,
-        conn=conn0,
         best_parts=parts0,
-        best_cost=cost0,
-        best_maxsize=max0,
+        best_cost=cost0.astype(jnp.int32),
+        best_maxsize=max0.astype(jnp.int32),
         best_balanced=max0 <= limit,
         lock=jnp.zeros((g.n_max,), bool),
         since_best=jnp.int32(0),
@@ -204,55 +148,33 @@ def _refine_loop(
         return (st.since_best < patience) & (st.it < max_iter)
 
     def body(st: RefineState):
-        balanced = jnp.max(st.conn.sizes) <= limit
-        # one ConnQueries per iteration, shared by all three move kinds
-        q = cn.state_queries(g, st.conn, st.parts, k, backend)
+        sizes = metrics.part_sizes(g, st.parts, k)
+        balanced = jnp.max(sizes) <= limit
 
         def do_lp(_):
-            move, dest = jetlp_moves(
-                g, st.parts, k, st.lock, c, backend, variant, queries=q
-            )
-            return move, dest, move, jnp.int32(0), jnp.int32(1), jnp.int32(0)
+            move, dest = jetlp_moves(g, st.parts, k, st.lock, c, backend, variant)
+            parts2 = jnp.where(move, dest, st.parts)
+            return parts2, move, jnp.int32(0), jnp.int32(1), jnp.int32(0)
 
         def do_rb(_):
             def weak(_):
-                return rb.jetrw_moves(g, st.parts, k, lam, backend,
-                                      conn=st.conn, queries=q)
+                move, dest = rb.jetrw_moves(g, st.parts, k, lam, backend)
+                return move, dest
 
             def strong(_):
-                return rb.jetrs_moves(g, st.parts, k, lam, backend,
-                                      conn=st.conn, queries=q)
+                move, dest = rb.jetrs_moves(g, st.parts, k, lam, backend)
+                return move, dest
 
-            move, dest = jax.lax.cond(st.weak_count < b_max, weak, strong,
-                                      None)
+            move, dest = jax.lax.cond(st.weak_count < b_max, weak, strong, None)
+            parts2 = jnp.where(move, dest, st.parts)
             # rebalancing does not touch lock state (paper §4.1.3)
-            return (move, dest, st.lock, st.weak_count + 1, jnp.int32(0),
-                    jnp.int32(1))
+            return parts2, st.lock, st.weak_count + 1, jnp.int32(0), jnp.int32(1)
 
-        move, dest, lock2, weak2, dlp, drb = jax.lax.cond(
-            balanced, do_lp, do_rb, None
-        )
-        parts2 = jnp.where(move, dest, st.parts)
+        parts2, lock2, weak2, dlp, drb = jax.lax.cond(balanced, do_lp, do_rb, None)
 
-        # Alg 4.4 delta update; `rebuild_every` is the full-rebuild hatch.
-        def incr(_):
-            return cn.apply_moves(g, st.conn, st.parts, move, dest, k,
-                                  backend)
-
-        def full(_):
-            return cn.rebuild_state(g, st.conn, parts2, k, backend)
-
-        if rebuild_every == 1:
-            conn2 = full(None)
-        elif rebuild_every == 0:
-            conn2 = incr(None)
-        else:
-            conn2 = jax.lax.cond(
-                (st.it + 1) % rebuild_every == 0, full, incr, None
-            )
-
-        cost2 = conn2.cut
-        max2 = jnp.max(conn2.sizes).astype(jnp.int32)
+        cost2 = metrics.cutsize(g, parts2).astype(jnp.int32)
+        sizes2 = metrics.part_sizes(g, parts2, k)
+        max2 = jnp.max(sizes2).astype(jnp.int32)
         bal2 = max2 <= limit
 
         # Best tracking (Alg 4.1 lines 16-23, fixed so a balanced partition
@@ -268,7 +190,6 @@ def _refine_loop(
 
         return RefineState(
             parts=parts2,
-            conn=conn2,
             best_parts=jnp.where(take, parts2, st.best_parts),
             best_cost=jnp.where(take, cost2, st.best_cost),
             best_maxsize=jnp.where(take, max2, st.best_maxsize),

@@ -1,9 +1,14 @@
 """Table 4/5-style: refinement effectiveness — Jet vs size-constrained LP
 on identical inputs (same hierarchy, same initial partition), plus the
-paper's §7.1.2 2D-vs-3D weakness measurement (grid vs cube).
+paper's §7.1.2 2D-vs-3D weakness measurement (grid vs cube), plus the
+stateful-refinement A/B: incremental ConnState updates (Alg 4.4, default)
+vs a full rebuild every iteration (``rebuild_every=1``).  Results land in
+``BENCH_refinement.json`` with per-iteration timings for both modes.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax.numpy as jnp
@@ -74,20 +79,133 @@ def weakness_2d_vs_3d(k: int = 16, lam: float = 0.03, seeds=(0,)):
     return out
 
 
-def main(quick=False):
+def incremental_vs_rebuild(k: int = 16, lam: float = 0.03, quick=False,
+                           modes=("incremental", "rebuild", "seed"),
+                           backend: str = "dense"):
+    """Per-iteration refinement cost, three ways:
+
+    * ``incremental`` — threaded ConnState advanced by Alg 4.4 deltas
+      (``rebuild_every=0``, the default path);
+    * ``rebuild``     — same threaded state, fully rebuilt every iteration
+      (``rebuild_every=1``, the escape hatch);
+    * ``seed``        — the vendored pre-ConnState loop
+      (benchmarks/_seed_refine.py), which rebuilds connectivity inside every
+      move function and recomputes sizes/cut from the parts vector.
+
+    All modes walk bit-identical trajectories, so iteration counts and cuts
+    must match — the delta is pure per-iteration cost.  Two scenarios per
+    graph: ``lp`` (balanced random start, Jetlp-dominated) and ``rb``
+    (everything in part 0, rebalance-dominated — where the seed loop paid
+    for three connectivity builds per iteration).
+    """
+    from benchmarks import _seed_refine
+
+    names = ["grid", "cube"] if quick else list(SUITE)
+
+    if backend == "ell":
+        # the pre-ConnState loop cannot trace csr_to_ell under jit (its max
+        # degree was a traced value) — the stateful refactor is what made
+        # the ELL backend usable inside the refinement loop at all
+        modes = tuple(m for m in modes if m != "seed")
+
+    def run_mode(g, parts0, mode):
+        if mode == "seed":
+            fn = lambda: _seed_refine.jet_refine(g, parts0, k, lam=lam,
+                                                 backend=backend)
+        else:
+            re_every = {"incremental": 0, "rebuild": 1}[mode]
+            fn = lambda: refine.jet_refine(g, parts0, k, lam=lam,
+                                           backend=backend,
+                                           rebuild_every=re_every)
+        p, _ = fn()  # compile
+        jax.block_until_ready(p)
+        t0 = time.perf_counter()
+        p, stats = fn()
+        jax.block_until_ready(p)
+        dt = time.perf_counter() - t0
+        iters = int(stats["iterations"])
+        return {
+            "total_s": dt,
+            "iterations": iters,
+            "us_per_iter": dt / max(iters, 1) * 1e6,
+            "cut": int(stats["best_cost"]),
+        }
+
+    out = {}
+    for name in names:
+        g = load(name)
+        jax.clear_caches()
+        scenarios = {
+            "lp": _balanced_random(g, k, 0),
+            "rb": jnp.where(g.vertex_mask(), 0, k).astype(jnp.int32),
+        }
+        rec = {}
+        for scen, parts0 in scenarios.items():
+            srec = {m: run_mode(g, parts0, m) for m in modes}
+            cuts = {srec[m]["cut"] for m in modes}
+            assert len(cuts) == 1, f"modes diverged on {name}/{scen}: {srec}"
+            base = srec.get("seed") or srec.get("rebuild")
+            if base is not None and "incremental" in srec:
+                srec["speedup_per_iter"] = (
+                    base["us_per_iter"]
+                    / max(srec["incremental"]["us_per_iter"], 1e-9)
+                )
+            rec[scen] = srec
+        out[name] = rec
+    return out
+
+
+def main(quick=False, modes=("incremental", "rebuild", "seed"),
+         json_path="BENCH_refinement.json"):
     rows, detail = run(quick=quick)
     print("# Jet vs constrained LP on identical inputs "
           "(ratio > 1 means Jet is better)")
     for name, ratio in rows:
         print(f"{name},{ratio:.4f}")
+    report = {"refine_effect": detail}
     if not quick:
         w = weakness_2d_vs_3d()
         print(f"weakness/grid_2d,{w['grid']:.4f}")
         print(f"weakness/cube_3d,{w['cube']:.4f}")
         print(f"# paper predicts grid ratio < cube ratio "
               f"(2D weakness): {w['grid']:.3f} vs {w['cube']:.3f}")
+        report["weakness_2d_vs_3d"] = w
+    report["incremental_vs_rebuild"] = {}
+    for backend in ("dense", "ell"):
+        ivr = incremental_vs_rebuild(quick=quick, modes=modes,
+                                     backend=backend)
+        report["incremental_vs_rebuild"][backend] = ivr
+        for name, rec in ivr.items():
+            for scen, srec in rec.items():
+                for mode, mrec in srec.items():
+                    if mode == "speedup_per_iter":
+                        print(f"refine_iter/{backend}/{name}/{scen}/speedup,"
+                              f"{mrec:.3f}")
+                    else:
+                        print(f"refine_iter/{backend}/{name}/{scen}/{mode},"
+                              f"{mrec['us_per_iter']:.1f},us_per_iter")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"# wrote {json_path}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    grp = ap.add_mutually_exclusive_group()
+    grp.add_argument("--incremental", action="store_true",
+                     help="time only the incremental (rebuild_every=0) mode")
+    grp.add_argument("--rebuild", action="store_true",
+                     help="time only the per-iteration-rebuild mode")
+    ap.add_argument("--json", default="BENCH_refinement.json",
+                    help="output JSON path ('' to disable)")
+    args = ap.parse_args()
+    if args.incremental:
+        modes = ("incremental",)
+    elif args.rebuild:
+        modes = ("rebuild",)
+    else:
+        modes = ("incremental", "rebuild", "seed")
+    main(quick=args.quick, modes=modes, json_path=args.json)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import coarsen as co
+from repro.core import connectivity as cn
 from repro.core import initial, metrics, refine
 
 
@@ -28,7 +29,9 @@ class PartitionConfig:
     patience: int = 12                # iterations without a new best
     max_iter: int = 300
     b_max: int = 2                    # weak rebalances before strong
-    backend: str = "dense"            # connectivity backend: dense|sorted
+    backend: str = "dense"            # connectivity backend: dense|sorted|ell
+    rebuild_every: int = 0            # full ConnState rebuild period (0=never,
+                                      # 1=paper's always-rebuild fallback)
     init_method: str = "voronoi"      # random|voronoi
     variant: str = "full"             # Jetlp variant (Table 3 ablations)
     seed: int = 0
@@ -62,10 +65,19 @@ def partition(g, cfg: PartitionConfig) -> PartitionResult:
 
     t0 = time.perf_counter()
     level_stats = []
-    # refine coarsest, then uncoarsen
+    # refine coarsest, then uncoarsen.  The driver owns the per-level
+    # ConnState: built once here, threaded through the whole refinement
+    # loop, and advanced incrementally after every move list (Alg 4.4).
     for i in range(len(levels) - 1, -1, -1):
         gi = levels[i].graph
         c = cfg.c_finest if i == 0 else cfg.c_coarse
+        parts = jnp.where(gi.vertex_mask(), parts, k).astype(jnp.int32)
+        max_deg = (
+            int(np.max(np.asarray(gi.degrees())))
+            if cfg.backend == "ell" else None
+        )
+        conn0 = cn.build_state(gi, parts, k, cfg.backend,
+                               max_degree=max_deg)
         parts, stats = refine.jet_refine(
             gi,
             parts,
@@ -78,6 +90,9 @@ def partition(g, cfg: PartitionConfig) -> PartitionResult:
             max_iter=cfg.max_iter,
             b_max=cfg.b_max,
             variant=cfg.variant,
+            rebuild_every=cfg.rebuild_every,
+            conn0=conn0,
+            max_degree=max_deg,
         )
         level_stats.append(
             {"level": i, "n": int(gi.n), "m": int(gi.m)}
@@ -123,6 +138,7 @@ def refine_only(g, parts0, cfg: PartitionConfig) -> PartitionResult:
         max_iter=cfg.max_iter,
         b_max=cfg.b_max,
         variant=cfg.variant,
+        rebuild_every=cfg.rebuild_every,
     )
     sizes = metrics.part_sizes(g, parts, cfg.k)
     W = g.total_vweight()

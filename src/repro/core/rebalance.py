@@ -8,7 +8,6 @@ quantization, which we keep verbatim — tests/test_properties.py checks it.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import connectivity as cn
@@ -38,58 +37,6 @@ def _dest_caps(sizes: jnp.ndarray, limit: jnp.ndarray, total_w: jnp.ndarray, k: 
     over = sizes > limit
     valid = (sizes <= sigma) & ~over
     return over, valid, sigma, opt
-
-
-def _rw_queries(g, parts, k, valid_parts, backend):
-    """Best valid-destination part per vertex: (best_conn, best_part, any)."""
-    if backend == "dense":
-        mat = cn.conn_matrix(g, parts, k)
-        cols = jnp.arange(k + 1, dtype=jnp.int32)
-        colmask = jnp.concatenate([valid_parts, jnp.zeros((1,), bool)])
-        masked = jnp.where(colmask[None, :], mat, -1)
-        best_conn = jnp.max(masked, axis=1)
-        best_part = jnp.argmax(masked, axis=1).astype(jnp.int32)
-        has = best_conn > 0
-        return jnp.maximum(best_conn, 0), jnp.where(has, best_part, k), has
-    # sorted backend
-    run_vertex, run_part, run_conn, valid = cn.sorted_runs(g, parts, k)
-    n_seg = g.n_max + 1
-    pclip = jnp.clip(run_part, 0, k)
-    vp = jnp.concatenate([valid_parts, jnp.zeros((1,), bool)])
-    mask = valid & vp[pclip]
-    best_conn, best_part = cn._seg_argmax_part(
-        run_conn, run_part, run_vertex, mask, n_seg, k
-    )
-    has = best_conn[: g.n_max] > 0
-    return (
-        jnp.maximum(best_conn[: g.n_max], 0),
-        jnp.where(has, best_part[: g.n_max], k).astype(jnp.int32),
-        has,
-    )
-
-
-def _rs_queries(g, parts, k, valid_parts, backend):
-    """Sum and count of connectivity over *adjacent* valid parts per vertex."""
-    if backend == "dense":
-        mat = cn.conn_matrix(g, parts, k)
-        colmask = jnp.concatenate([valid_parts, jnp.zeros((1,), bool)])
-        sel = jnp.where(colmask[None, :], mat, 0)
-        s = jnp.sum(sel, axis=1)
-        cnt = jnp.sum((sel > 0).astype(jnp.int32), axis=1)
-        return s, cnt
-    run_vertex, run_part, run_conn, valid = cn.sorted_runs(g, parts, k)
-    n_seg = g.n_max + 1
-    vp = jnp.concatenate([valid_parts, jnp.zeros((1,), bool)])
-    mask = valid & vp[jnp.clip(run_part, 0, k)]
-    s = jax.ops.segment_sum(
-        jnp.where(mask, run_conn, 0), run_vertex, num_segments=n_seg
-    )[: g.n_max]
-    cnt = jax.ops.segment_sum(
-        jnp.where(mask & (run_conn > 0), 1, 0).astype(jnp.int32),
-        run_vertex,
-        num_segments=n_seg,
-    )[: g.n_max]
-    return s, cnt
 
 
 def _rank_to_part(valid_parts: jnp.ndarray, k: int):
@@ -134,8 +81,8 @@ def _evict_prefix(g: Graph, parts, k, movable, slots, sizes, limit):
     return evict, order, evict_s, ecum_before
 
 
-def _common(g: Graph, parts, k, lam):
-    sizes = metrics.part_sizes(g, parts, k)
+def _common(g: Graph, conn: cn.ConnState, parts, k, lam):
+    sizes = conn.sizes
     W = g.total_vweight()
     limit = metrics.size_limit(W, k, lam)
     over, valid, sigma, opt = _dest_caps(sizes, limit, W, k)
@@ -148,11 +95,26 @@ def _common(g: Graph, parts, k, lam):
     return sizes, limit, over, valid, sigma, opt, movable
 
 
-def jetrw_moves(g: Graph, parts, k: int, lam: float, backend: str = "dense"):
-    """Weak rebalancing (Alg 4.3): evictees go to their best valid part."""
-    sizes, limit, over, valid, sigma, opt, movable = _common(g, parts, k, lam)
-    best_conn, best_part, has = _rw_queries(g, parts, k, valid, backend)
-    q = cn.queries(g, parts, k, backend=backend)
+def _state_and_queries(g, parts, k, backend, conn, queries):
+    """Fill in state/queries for direct (non-loop) callers."""
+    if conn is None:
+        conn = cn.build_state(g, parts, k, backend)
+    if queries is None:
+        queries = cn.state_queries(g, conn, parts, k, backend)
+    return conn, queries
+
+
+def jetrw_moves(g: Graph, parts, k: int, lam: float, backend: str = "dense",
+                conn: cn.ConnState | None = None, queries=None):
+    """Weak rebalancing (Alg 4.3): evictees go to their best valid part.
+
+    ``conn``/``queries`` come from the threaded refinement state; standalone
+    callers may omit them and pay for a one-off build.
+    """
+    conn, q = _state_and_queries(g, parts, k, backend, conn, queries)
+    sizes, limit, over, valid, sigma, opt, movable = _common(g, conn, parts,
+                                                             k, lam)
+    best_conn, best_part, has = cn.rw_queries(g, conn, k, valid, backend)
     # fallback destination: pseudo-random valid part (deterministic hash)
     part_of_rank, num_valid = _rank_to_part(valid, k)
     vid = jnp.arange(g.n_max, dtype=jnp.uint32)
@@ -168,11 +130,13 @@ def jetrw_moves(g: Graph, parts, k: int, lam: float, backend: str = "dense"):
     return evict, dest.astype(jnp.int32)
 
 
-def jetrs_moves(g: Graph, parts, k: int, lam: float, backend: str = "dense"):
+def jetrs_moves(g: Graph, parts, k: int, lam: float, backend: str = "dense",
+                conn: cn.ConnState | None = None, queries=None):
     """Strong rebalancing: cookie-cutter destination overlay (one shot)."""
-    sizes, limit, over, valid, sigma, opt, movable = _common(g, parts, k, lam)
-    s_conn, cnt = _rs_queries(g, parts, k, valid, backend)
-    q = cn.queries(g, parts, k, backend=backend)
+    conn, q = _state_and_queries(g, parts, k, backend, conn, queries)
+    sizes, limit, over, valid, sigma, opt, movable = _common(g, conn, parts,
+                                                             k, lam)
+    s_conn, cnt = cn.rs_queries(g, conn, k, valid, backend)
     mean_conn = jnp.where(cnt > 0, s_conn // jnp.maximum(cnt, 1), 0)
     loss = q.conn_self - mean_conn  # Eq 4.10 (sign per Alg 4.3 convention)
     slots = slot(loss)

@@ -1,0 +1,3 @@
+"""Distribution substrate: sharding-constraint annotations for the model
+zoo (:mod:`repro.dist.constrain`) and the partition-aware device layout
+built on the Jet partitioner (:mod:`repro.dist.partition_aware`)."""

@@ -33,19 +33,51 @@ def csr_to_ell(g, max_degree: int | None = None):
     return nbr, wgt
 
 
-def jet_gain(nbr, wgt, parts, k: int, block_n: int = 256, use_pallas=None):
-    """Fused conn_self / best_part / best_conn (see jet_gain.py).
-
-    ``nbr`` holds neighbor ids; part ids are looked up here (outside the
-    kernel — TPU kernels avoid arbitrary gathers) and the padded ghost id N
-    maps to ghost part k.
-    """
-    n, d = nbr.shape
+def lookup_nbr_parts(nbr, parts, k: int):
+    """(N, D) neighbor part ids from a parts vector; ghost slots map to k."""
     parts_ext = jnp.concatenate([parts, jnp.array([k], jnp.int32)])
     nbr_parts = parts_ext[jnp.clip(nbr, 0, parts.shape[0])].astype(jnp.int32)
-    nbr_parts = jnp.where(nbr >= parts.shape[0], k, nbr_parts)
+    return jnp.where(nbr >= parts.shape[0], k, nbr_parts)
+
+
+def update_nbr_parts(nbr, nbr_parts, move, dest, k: int):
+    """Incrementally rewrite slots whose neighbor moved (paper Alg 4.4).
+
+    Elementwise over the (N, D) ELL tile — no gather of the full parts
+    vector, so the maintained state is the only connectivity read.
+    """
+    move_ext = jnp.concatenate([move, jnp.zeros((1,), bool)])
+    dest_ext = jnp.concatenate(
+        [dest.astype(jnp.int32), jnp.array([k], jnp.int32)]
+    )
+    idx = jnp.clip(nbr, 0, move.shape[0])
+    return jnp.where(move_ext[idx], dest_ext[idx], nbr_parts)
+
+
+def ell_to_matrix(nbr_parts, wgt, k: int):
+    """(N, k+1) dense connectivity matrix from maintained ELL state.
+
+    Used by the (rare) rebalance iterations, which need valid-destination
+    queries the fused kernel does not answer.
+    """
+    n, d = nbr_parts.shape
+    rows = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, d))
+    mat = jnp.zeros((n, k + 1), jnp.int32)
+    return mat.at[rows, nbr_parts].add(wgt)
+
+
+def jet_gain_from_parts(nbr_parts, wgt, parts, k: int, block_n: int = 256,
+                        use_pallas=None):
+    """Fused conn_self / best_part / best_conn from precomputed neighbor
+    parts — the entry point for the stateful ELL backend.
+
+    ``use_pallas=None`` auto-selects: the compiled kernel on TPU, the
+    bit-identical pure-jnp k-sweep elsewhere (interpret-mode Pallas is for
+    kernel validation, not production CPU runs).
+    """
+    n, d = nbr_parts.shape
     if use_pallas is None:
-        use_pallas = True
+        use_pallas = _on_tpu()
     if not use_pallas:
         return jet_gain_ref(nbr_parts, wgt, parts, k)
     pad = (-n) % block_n
@@ -57,3 +89,15 @@ def jet_gain(nbr, wgt, parts, k: int, block_n: int = 256, use_pallas=None):
         nbr_parts, wgt, parts, k, block_n=block_n, interpret=not _on_tpu()
     )
     return cs[:n], bp[:n], bc[:n]
+
+
+def jet_gain(nbr, wgt, parts, k: int, block_n: int = 256, use_pallas=None):
+    """Fused conn_self / best_part / best_conn (see jet_gain.py).
+
+    ``nbr`` holds neighbor ids; part ids are looked up here (outside the
+    kernel — TPU kernels avoid arbitrary gathers) and the padded ghost id N
+    maps to ghost part k.
+    """
+    nbr_parts = lookup_nbr_parts(nbr, parts, k)
+    return jet_gain_from_parts(nbr_parts, wgt, parts, k, block_n=block_n,
+                               use_pallas=use_pallas)

@@ -26,7 +26,11 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--imbalance", type=float, default=0.03)
     ap.add_argument("--phi", type=float, default=0.999)
-    ap.add_argument("--backend", default="dense", choices=["dense", "sorted"])
+    ap.add_argument("--backend", default="dense",
+                    choices=["dense", "sorted", "ell"])
+    ap.add_argument("--rebuild-every", type=int, default=0,
+                    help="full ConnState rebuild period inside refinement "
+                         "(0=never/incremental, 1=rebuild each iteration)")
     ap.add_argument("--init", default="voronoi", choices=["voronoi", "random"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write parts as .npy")
@@ -49,7 +53,7 @@ def main(argv=None):
 
     cfg = PartitionConfig(k=args.k, lam=args.imbalance, phi=args.phi,
                           backend=args.backend, init_method=args.init,
-                          seed=args.seed)
+                          rebuild_every=args.rebuild_every, seed=args.seed)
     res = partition(g, cfg)
     report = {
         "n": int(g.n), "m": int(g.m) // 2, "k": args.k,

@@ -45,7 +45,8 @@ ref_batch = {
 ref_loss = float(meshgraphnet.loss_fn(cfg, params, ref_batch)[0])
 
 # partitioned loss under shard_map on an 8-device mesh
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import compat_make_mesh
+mesh = compat_make_mesh((8,), ("data",))
 n_l = 64  # 256/8 = 32; pad blocks to 64 for slack
 h_cap = 64
 e_cap_total = 2048
@@ -80,5 +81,6 @@ def test_partitioned_equivalence_8dev():
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"}, cwd="/root/repo", timeout=600)
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        cwd="/root/repo", timeout=600)
     assert "OK" in r.stdout, f"stdout:\n{r.stdout[-3000:]}\nstderr:\n{r.stderr[-3000:]}"

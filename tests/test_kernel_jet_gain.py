@@ -66,7 +66,7 @@ def test_ell_path_matches_csr_connectivity(name):
     parts = jnp.asarray(rng.integers(0, k, g.n_max).astype(np.int32))
     parts = jnp.where(g.vertex_mask(), parts, k)
     nbr, wgt = csr_to_ell(g)
-    cs, bp, bc = jet_gain(nbr, wgt, parts, k)
+    cs, bp, bc = jet_gain(nbr, wgt, parts, k, use_pallas=True)
     q = cn.dense_queries(g, parts, k)
     n = int(g.n)
     np.testing.assert_array_equal(np.asarray(cs)[:n], np.asarray(q.conn_self)[:n])

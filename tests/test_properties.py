@@ -6,7 +6,10 @@ uniform vertex weights and non-negative losses.
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't die at collect
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import coarsen, connectivity as cn, metrics, rebalance, refine
 from repro.core.graph import build_csr_host
