@@ -4,9 +4,16 @@ Compares the full Jet partitioner against the same multilevel driver with
 size-constrained-LP refinement (our implementable stand-in for the LP-based
 competitors), across k and imbalance settings, and reports the paper's
 Table 2 phase breakdown (coarsen / initial partition / uncoarsen).
+
+Also the device-resident coarsening A/B (DESIGN.md §8): phase timings for
+``coarsen_mode="host"`` (legacy numpy repack) vs ``"device"`` (one jitted
+kernel per level on the static shape schedule), written to
+``BENCH_partitioner.json``.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -95,7 +102,78 @@ def time_breakdown(quick=False):
     return rows
 
 
-def main(quick=False):
+def coarsen_mode_ab(names=None, k=16, coarse_target=1024, reps=2,
+                    cfg_extra=None):
+    """Host-repack vs device-resident coarsening: per-phase wall time.
+
+    Each mode runs once cold (compile) then ``reps`` timed repetitions;
+    cuts must agree (both paths walk the same hierarchy).
+    """
+    if names is None:
+        names = list(SUITE)
+    graphs = {n: load(n) for n in names} if isinstance(names, list) else names
+    out = {}
+    for name, g in graphs.items():
+        rec = {}
+        for mode in ("host", "device"):
+            jax.clear_caches()
+            cfg = PartitionConfig(k=k, coarse_target=coarse_target,
+                                  coarsen_mode=mode, **(cfg_extra or {}))
+            res = partition(g, cfg)  # cold: includes compilation
+            timed = []
+            for _ in range(reps):
+                timed.append(partition(g, cfg))
+            cuts = {res.cut} | {t.cut for t in timed}
+            if len(cuts) != 1:
+                raise AssertionError(
+                    f"{name}/{mode}: nondeterministic cuts across reps {cuts}"
+                )
+            rec[mode] = {
+                "cut": res.cut,
+                "levels": res.levels,
+                "cold": res.times,
+                "warm": {
+                    ph: float(np.mean([t.times[ph] for t in timed]))
+                    for ph in ("coarsen_s", "initpart_s", "uncoarsen_s",
+                               "total_s")
+                },
+                "level_capacity": [
+                    (st["n"], st["m"], st["n_max"], st["m_max"])
+                    for st in res.level_stats
+                ],
+            }
+        if rec["host"]["cut"] != rec["device"]["cut"]:
+            raise AssertionError(
+                f"{name}: host/device coarsening diverged — "
+                f"host cut {rec['host']['cut']} vs device "
+                f"{rec['device']['cut']}"
+            )
+        for phase in ("coarsen_s", "total_s"):
+            rec[f"speedup_{phase}"] = (
+                rec["host"]["warm"][phase]
+                / max(rec["device"]["warm"][phase], 1e-9)
+            )
+        out[name] = rec
+    return out
+
+
+def main(quick=False, smoke=False, json_path="BENCH_partitioner.json"):
+    report = {}
+    if smoke:
+        # CI guard: tiny graph, one rep — exercises both coarsening modes
+        # end to end so the bench script can't silently rot.
+        from repro.data import graphs as gen
+
+        ab = coarsen_mode_ab(names={"smoke": gen.grid2d(16, 16)}, k=4,
+                             coarse_target=32, reps=1,
+                             cfg_extra={"max_iter": 40, "patience": 4})
+        report["coarsen_mode_ab"] = ab
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1)
+        print(json.dumps(report["coarsen_mode_ab"]["smoke"], indent=1))
+        print(f"-> {json_path}")
+        return report
+
     rows = quality(quick=quick)
     print("# end-to-end: geomean(CLP-multilevel cut / Jet cut); >1 = Jet wins")
     for name, v in rows:
@@ -104,8 +182,26 @@ def main(quick=False):
     print("# Table 2-style phase breakdown (note: host-loop timings on CPU)")
     for name, v in rows2:
         print(f"{name},{v:.2f}")
-    return rows + rows2
+    ab = coarsen_mode_ab(names=["grid", "rmat"] if quick else None,
+                         reps=1 if quick else 2)
+    print("# coarsen A/B: host repack vs device-resident (warm total)")
+    for name, rec in ab.items():
+        print(f"coarsen_ab/{name}/coarsen_speedup,"
+              f"{rec['speedup_coarsen_s']:.3f}")
+    report["quality"] = dict(rows)
+    report["breakdown"] = dict(rows2)
+    report["coarsen_mode_ab"] = ab
+    with open(json_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"-> {json_path}")
+    return report
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graph, 1 rep — CI guard for the bench script")
+    ap.add_argument("--json", default="BENCH_partitioner.json")
+    a = ap.parse_args()
+    main(quick=a.quick, smoke=a.smoke, json_path=a.json)

@@ -5,9 +5,19 @@ add two-hop matches (leaves, twins, relatives).  Contraction (Alg 3.1)
 deduplicates coarse edges — the paper uses per-vertex hashtables; we use a
 lexicographic sort + segmented sum (TPU idiom, deterministic).
 
-All matching/contraction math is jittable with static padded shapes; only
-the *repacking* of the (smaller) coarse graph into tight arrays happens on
-host, because array sizes shrink level to level.
+Two coarsening paths share the matching/contraction kernels (DESIGN.md §8):
+
+* **device** (default): :func:`coarsen_level` runs a whole level — HEM
+  rounds, the two-hop trigger (``lax.cond`` on the device-computed
+  unmatched fraction), ``coarse_map``, ``contract_edges``, and the
+  coarse-CSR build — as ONE jitted function with zero host transfers.
+  The driver re-buckets the result into a precomputed geometric
+  :func:`shape_schedule` of (n_max, m_max) capacities, so kernels compile
+  once per capacity rung instead of once per exact size.  The only host
+  syncs left are one 3-int32 stat fetch per level (termination check +
+  capacity selection).
+* **host** (legacy): :func:`coarsen_once` repacks the coarse graph into
+  tight arrays on host via numpy — kept as the equivalence/bench baseline.
 """
 from __future__ import annotations
 
@@ -18,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph
+from repro.core.graph import Graph, csr_from_edge_runs
 
 _KNUTH = jnp.uint32(2654435761)
 
@@ -76,16 +86,22 @@ def heavy_edge_matching(g: Graph, rounds: int = 8, seed: int = 0) -> jnp.ndarray
     return jax.lax.fori_loop(0, rounds, body, match)
 
 
-def _pair_by_key(key: jnp.ndarray, elig: jnp.ndarray, match: jnp.ndarray):
+def _pair_by_key(key: jnp.ndarray, elig: jnp.ndarray, match: jnp.ndarray,
+                 seed: int = 0):
     """Pair eligible vertices sharing a key: sort by key, pair ranks (0,1),(2,3)...
 
     within each equal-key group (group-aligned so odd-size groups leave
-    exactly one vertex unpaired).
+    exactly one vertex unpaired).  Within a group, vertices are ordered by a
+    seeded hash of their id, so which pairs form varies per level seed.
     """
     n_max = key.shape[0]
     INF = jnp.int32(2147483647)
     skey = jnp.where(elig, key, INF)
-    order = jnp.argsort(skey)  # stable; eligible first by key, then id
+    vid = jnp.arange(n_max, dtype=jnp.int32)
+    h = (_bij_hash(vid, seed) >> jnp.uint32(1)).astype(jnp.int32)
+    o1 = jnp.argsort(h, stable=True)
+    o2 = jnp.argsort(skey[o1], stable=True)
+    order = o1[o2]  # eligible first by key; within a key, by seeded hash
     sk = skey[order]
     pos = jnp.arange(n_max, dtype=jnp.int32)
     first = jnp.concatenate([jnp.ones((1,), bool), sk[1:] != sk[:-1]])
@@ -108,8 +124,14 @@ def _pair_by_key(key: jnp.ndarray, elig: jnp.ndarray, match: jnp.ndarray):
 
 
 @jax.jit
-def twohop_matching(g: Graph, match: jnp.ndarray, mm_max_degree: int = 64):
-    """Leaves, twins, relatives (paper §3.1) via sort-pairing."""
+def twohop_matching(
+    g: Graph, match: jnp.ndarray, mm_max_degree: int = 64, seed: int = 0
+):
+    """Leaves, twins, relatives (paper §3.1) via sort-pairing.
+
+    ``seed`` salts the twin neighborhood hashes so each level's twin/relative
+    pairing is decorrelated from every other level's.
+    """
     n_max = g.n_max
     vid = jnp.arange(n_max, dtype=jnp.int32)
     vmask = g.vertex_mask()
@@ -119,20 +141,22 @@ def twohop_matching(g: Graph, match: jnp.ndarray, mm_max_degree: int = 64):
     unmatched = (match < 0) & vmask
     sole = g.adjncy[jnp.clip(g.xadj[:-1], 0, g.m_max - 1)]
     elig = unmatched & (deg == 1)
-    match = _pair_by_key(jnp.where(elig, sole, 0), elig, match)
+    match = _pair_by_key(jnp.where(elig, sole, 0), elig, match, seed * 4 + 1)
 
     # --- twins: unmatched vertices with identical neighborhoods (hash groups)
     unmatched = (match < 0) & vmask
     em = g.edge_mask()
-    h1 = jnp.where(em, (_bij_hash(g.adjncy, 11) >> jnp.uint32(2)).astype(jnp.int32), 0)
-    h2 = jnp.where(em, (_bij_hash(g.adjncy, 23) >> jnp.uint32(2)).astype(jnp.int32), 0)
+    s_a = seed * 1000003 + 11
+    s_b = seed * 1000003 + 23
+    h1 = jnp.where(em, (_bij_hash(g.adjncy, s_a) >> jnp.uint32(2)).astype(jnp.int32), 0)
+    h2 = jnp.where(em, (_bij_hash(g.adjncy, s_b) >> jnp.uint32(2)).astype(jnp.int32), 0)
     s1 = jax.ops.segment_sum(h1, g.esrc, num_segments=n_max)
     s2 = jax.ops.segment_sum(h2, g.esrc, num_segments=n_max)
     nbhash = ((s1 * jnp.int32(31) + s2) ^ (deg * jnp.int32(0x61C88647))) & jnp.int32(
         0x7FFFFFFF
     )
     elig = unmatched & (deg >= 1)
-    match = _pair_by_key(jnp.where(elig, nbhash, 0), elig, match)
+    match = _pair_by_key(jnp.where(elig, nbhash, 0), elig, match, seed * 4 + 2)
 
     # --- relatives: pair unmatched vertices within a matchmaker's neighborhood
     unmatched = (match < 0) & vmask
@@ -146,7 +170,7 @@ def twohop_matching(g: Graph, match: jnp.ndarray, mm_max_degree: int = 64):
         jnp.where(e_mm, g.adjncy, INF), g.esrc, num_segments=n_max
     )
     elig = unmatched & (mm_key < INF)
-    match = _pair_by_key(jnp.where(elig, mm_key, 0), elig, match)
+    match = _pair_by_key(jnp.where(elig, mm_key, 0), elig, match, seed * 4 + 3)
     return match
 
 
@@ -205,6 +229,7 @@ def contract_edges(g: Graph, cmap: jnp.ndarray):
 class CoarsenLevel(NamedTuple):
     graph: Graph
     cmap: jnp.ndarray  # fine vertex -> coarse vertex of the NEXT level
+    stats: dict | None = None  # host ints: n, m, max_degree, n_max, m_max
 
 
 def _round_up(x: int, mult: int = 8) -> int:
@@ -217,14 +242,21 @@ def coarsen_once(
     mm_max_degree: int = 64,
     seed: int = 0,
 ) -> tuple[Graph, jnp.ndarray]:
-    """One coarsening level. Returns (coarse graph (tight arrays), cmap)."""
+    """One coarsening level, legacy host-repack path.
+
+    Returns (coarse graph (tight arrays), cmap).  Kept as the equivalence
+    baseline for :func:`coarsen_level`; prefer the device path in drivers.
+    """
     match = heavy_edge_matching(g, seed=seed)
     n = int(g.n)
-    unmatched_frac = float(
+    unmatched = int(
         np.asarray(jnp.sum(((match < 0) & g.vertex_mask()).astype(jnp.int32)))
-    ) / max(n, 1)
-    if unmatched_frac > twohop_threshold:
-        match = twohop_matching(g, match, mm_max_degree)
+    )
+    # float32 on purpose: bit-identical to coarsen_level's on-device trigger
+    # (a float64 division here could disagree near the threshold for huge n)
+    frac = np.float32(unmatched) / np.float32(max(n, 1))
+    if frac > np.float32(twohop_threshold):
+        match = twohop_matching(g, match, mm_max_degree, seed)
     cmap, nc_dev = coarse_map(g, match)
     cu_run, cv_run, w_run, run_valid, n_runs_dev, vwgt_c = contract_edges(g, cmap)
     nc = int(nc_dev)
@@ -261,29 +293,209 @@ def coarsen_once(
     return gc, cmap
 
 
+# ---------------------------------------------------------------------------
+# Device-resident coarsening (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("hem_rounds",))
+def coarsen_level(
+    g: Graph,
+    seed: int = 0,
+    twohop_threshold: float = 0.25,
+    mm_max_degree: int = 64,
+    hem_rounds: int = 8,
+) -> tuple[Graph, jnp.ndarray]:
+    """One whole coarsening level as a single jitted function — no host syncs.
+
+    HEM rounds, the two-hop trigger (``lax.cond`` on the device-computed
+    unmatched fraction), ``coarse_map``, ``contract_edges``, and the
+    device-side coarse-CSR build all run in one XLA program.  The coarse
+    graph comes back padded at the FINE graph's capacities (``nc <= n`` and
+    ``n_runs <= m`` guarantee they fit); the driver re-buckets it with
+    :meth:`Graph.with_capacity` after reading the level stats.
+
+    ``seed``/``twohop_threshold``/``mm_max_degree`` are traced, so changing
+    them never recompiles; only the capacity bucket (array shapes) does.
+    """
+    match = heavy_edge_matching(g, rounds=hem_rounds, seed=seed)
+    unmatched = jnp.sum(((match < 0) & g.vertex_mask()).astype(jnp.int32))
+    frac = unmatched.astype(jnp.float32) / jnp.maximum(g.n, 1).astype(jnp.float32)
+    match = jax.lax.cond(
+        frac > twohop_threshold,
+        lambda m: twohop_matching(g, m, mm_max_degree, seed),
+        lambda m: m,
+        match,
+    )
+    cmap, nc = coarse_map(g, match)
+    cu_run, cv_run, w_run, run_valid, n_runs, vwgt_c = contract_edges(g, cmap)
+    gc = csr_from_edge_runs(
+        cu_run, cv_run, w_run, run_valid, n_runs, vwgt_c, nc,
+        n_max=g.n_max, m_max=g.m_max,
+    )
+    return gc, cmap
+
+
+@jax.jit
+def _level_stats_dev(g: Graph) -> jnp.ndarray:
+    """(n, m, max_degree) as one int32 device array — fetched in ONE transfer."""
+    return jnp.stack(
+        [g.n, g.m, jnp.max(g.degrees()).astype(jnp.int32)]
+    ).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("n_max", "m_max"))
+def _rebucket(g: Graph, n_max: int, m_max: int) -> Graph:
+    return g.with_capacity(n_max, m_max)
+
+
+def _fetch_stats(g: Graph) -> dict:
+    n, m, max_deg = (int(x) for x in np.asarray(_level_stats_dev(g)))
+    return {"n": n, "m": m, "max_degree": max_deg,
+            "n_max": g.n_max, "m_max": g.m_max}
+
+
+def shape_schedule(
+    n_max: int,
+    m_max: int,
+    ratio: float = 1.6,
+    safety: float = 1.25,
+    stall_ratio: float = 0.95,
+    align: int = 64,
+    floor: int = 64,
+) -> tuple[tuple[int, int], ...]:
+    """Geometric capacity ladder for the device coarsening path.
+
+    Each rung shrinks both capacities by ``min(safety / ratio, stall_ratio)``
+    — HEM halves at best (``ratio``), rarely that fast (``safety`` headroom),
+    and a level shrinking less than ``stall_ratio`` terminates coarsening
+    anyway, so a smaller per-rung factor would only create rungs no level
+    can ever land in.  Rungs are aligned so distinct graphs share buckets
+    (and therefore compiled kernels).  Descending; rung 0 always fits the
+    input graph.
+    """
+    if ratio <= 0 or safety <= 0 or align <= 0:
+        raise ValueError(
+            f"ratio/safety/align must be positive, got {ratio}/{safety}/{align}"
+        )
+    f = min(safety / ratio, stall_ratio)
+    if not 0.0 < f < 1.0:
+        raise ValueError(
+            f"per-rung shrink min(safety/ratio, stall_ratio)={f} must be in "
+            f"(0, 1), got ratio={ratio} safety={safety} "
+            f"stall_ratio={stall_ratio}"
+        )
+    # Rung 0 is the input's EXACT capacity (not aligned up): the finest
+    # level must keep the caller's padding so the final parts vector lines
+    # up with the caller's graph.
+    rungs = [(max(n_max, 1), max(m_max, 1))]
+    n, m = rungs[0]
+    while n > floor or m > floor:
+        n = max(int(n * f), 1)
+        m = max(int(m * f), 1)
+        rung = (_round_up(n, align), _round_up(m, align))
+        if rung[0] <= rungs[-1][0] and rung[1] <= rungs[-1][1]:
+            if rung != rungs[-1]:
+                rungs.append(rung)
+        # alignment can lift a tiny rung above its predecessor — skip it
+    return tuple(rungs)
+
+
+def select_capacity(
+    schedule: tuple[tuple[int, int], ...], n: int, m: int
+) -> tuple[int, int]:
+    """Smallest fitting capacity, chosen per axis.
+
+    Vertex and edge counts shrink at different rates (meshes lose vertices
+    faster than edges early on), so each axis picks its own smallest
+    fitting rung — a joint pick would strand a level in an oversized
+    bucket whenever one axis lags.  Rung 0 always fits both.
+    """
+    n_cap = min(nc for nc, _ in schedule if nc >= n)
+    m_cap = min(mc for _, mc in schedule if mc >= m)
+    return (n_cap, m_cap)
+
+
 def multilevel_coarsen(
     g: Graph,
     coarse_target: int = 4096,
     max_levels: int = 40,
     stall_ratio: float = 0.95,
     seed: int = 0,
+    mode: str = "device",
+    schedule: tuple[tuple[int, int], ...] | None = None,
+    twohop_threshold: float = 0.25,
+    mm_max_degree: int = 64,
+    bucket_ratio: float = 1.6,
+    bucket_safety: float = 1.25,
+    bucket_align: int = 64,
 ) -> list[CoarsenLevel]:
     """MLCoarsen (Alg 2.1 line 1): list of levels, finest first.
 
     ``levels[i].cmap`` maps level-i vertices into level-(i+1)'s graph.
-    The last entry's cmap is None (coarsest graph).
+    The last entry's cmap is None (coarsest graph).  Every level carries
+    host ``stats`` (n, m, max_degree, capacities) captured in one per-level
+    transfer, so downstream consumers (ELL backend, ConnState build) never
+    re-sync.
+
+    ``mode="device"`` (default) runs each level via :func:`coarsen_level`
+    and re-buckets results along ``schedule`` (a :func:`shape_schedule`
+    ladder); the only host decisions are the termination check and the
+    capacity selection.  ``mode="host"`` is the legacy per-level numpy
+    repack via :func:`coarsen_once`.
     """
-    levels: list[CoarsenLevel] = []
+    if mode not in ("device", "host"):
+        raise ValueError(f"unknown coarsen mode {mode!r}")
     cur = g
+    stats0 = _fetch_stats(cur)
+    if mode == "device":
+        if schedule is None:
+            schedule = shape_schedule(
+                g.n_max, g.m_max, ratio=bucket_ratio, safety=bucket_safety,
+                stall_ratio=stall_ratio, align=bucket_align,
+            )
+        if schedule[0][0] < stats0["n"] or schedule[0][1] < stats0["m"]:
+            raise ValueError(
+                f"schedule rung 0 {schedule[0]} cannot hold the input graph "
+                f"(n={stats0['n']}, m={stats0['m']}) — with_capacity would "
+                "silently truncate real vertices/edges"
+            )
+        if (cur.n_max, cur.m_max) != schedule[0]:
+            cur = _rebucket(cur, *schedule[0])
+            stats0 = {**stats0, "n_max": schedule[0][0],
+                      "m_max": schedule[0][1]}
+
+    def step(fine, lvl):
+        """One level + its stats; per-level host syncs live here."""
+        if mode == "host":
+            gc, cmap = coarsen_once(
+                fine, twohop_threshold=twohop_threshold,
+                mm_max_degree=mm_max_degree, seed=seed + lvl,
+            )
+            return gc, cmap, _fetch_stats(gc)
+        gc, cmap = coarsen_level(
+            fine, seed=seed + lvl, twohop_threshold=twohop_threshold,
+            mm_max_degree=mm_max_degree,
+        )
+        # The ONLY device-path host sync: 3 int32 (termination + capacity).
+        st = _fetch_stats(gc)
+        cap = select_capacity(schedule, st["n"], st["m"])
+        if cap != (gc.n_max, gc.m_max):
+            gc = _rebucket(gc, *cap)
+            st = {**st, "n_max": cap[0], "m_max": cap[1]}
+        return gc, cmap, st
+
+    levels: list[CoarsenLevel] = []
+    stats = stats0
     for lvl in range(max_levels):
-        if int(cur.n) <= coarse_target:
+        if stats["n"] <= coarse_target:
             break
-        gc, cmap = coarsen_once(cur, seed=seed + lvl)
-        if int(gc.n) > stall_ratio * int(cur.n):  # stalled
+        gc, cmap, stats_c = step(cur, lvl)
+        if stats_c["n"] > stall_ratio * stats["n"]:  # stalled
             break
-        levels.append(CoarsenLevel(graph=cur, cmap=cmap))
-        cur = gc
-    levels.append(CoarsenLevel(graph=cur, cmap=None))
+        levels.append(CoarsenLevel(graph=cur, cmap=cmap, stats=stats))
+        cur, stats = gc, stats_c
+    levels.append(CoarsenLevel(graph=cur, cmap=None, stats=stats))
     return levels
 
 

@@ -18,6 +18,18 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _fit(a: jnp.ndarray, size: int, pad: str = "zeros") -> jnp.ndarray:
+    """Slice or pad a 1-D array to a static length (jit-safe)."""
+    cur = a.shape[0]
+    if size == cur:
+        return a
+    if size < cur:
+        return a[:size]
+    if pad == "edge":
+        return jnp.pad(a, (0, size - cur), mode="edge")
+    return jnp.pad(a, (0, size - cur))
+
+
 class Graph(NamedTuple):
     """Padded CSR graph. Shapes: xadj (N+1,), adjncy/adjwgt/esrc (M,), vwgt (N,)."""
 
@@ -52,6 +64,59 @@ class Graph(NamedTuple):
     def total_eweight(self) -> jnp.ndarray:
         """Sum of undirected edge weights (each edge stored twice)."""
         return jnp.sum(self.adjwgt) // 2
+
+    def with_capacity(self, n_max: int, m_max: int) -> "Graph":
+        """Re-bucket to new padded capacities (jit-safe).
+
+        Requires ``n <= n_max`` and ``m <= m_max`` — padding invariants are
+        preserved: the grown ``xadj`` tail repeats ``xadj[-1] == m``, and
+        grown edge/vertex arrays are zero.  ``n``/``m`` stay traced.
+        """
+        return Graph(
+            xadj=_fit(self.xadj, n_max + 1, pad="edge"),
+            adjncy=_fit(self.adjncy, m_max),
+            adjwgt=_fit(self.adjwgt, m_max),
+            vwgt=_fit(self.vwgt, n_max),
+            esrc=_fit(self.esrc, m_max),
+            n=self.n,
+            m=self.m,
+        )
+
+
+def csr_from_edge_runs(
+    cu: jnp.ndarray,
+    cv: jnp.ndarray,
+    w: jnp.ndarray,
+    valid: jnp.ndarray,
+    n_edges: jnp.ndarray,
+    vwgt: jnp.ndarray,
+    n_vertices: jnp.ndarray,
+    *,
+    n_max: int,
+    m_max: int,
+) -> Graph:
+    """Device-side CSR constructor from deduplicated edge runs (jit-safe).
+
+    ``cu``/``cv``/``w`` are edge runs sorted lexicographically by (cu, cv)
+    with all valid runs contiguous at the front (``valid`` marks them);
+    ``n_edges``/``n_vertices`` are traced true counts.  Builds ``xadj`` by
+    segment-count + cumsum entirely on device — no host repack.
+    """
+    counts = jnp.zeros(n_max, dtype=jnp.int32).at[
+        jnp.where(valid, cu, 0)
+    ].add(valid.astype(jnp.int32), mode="drop")
+    xadj = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts).astype(jnp.int32)]
+    )
+    return Graph(
+        xadj=xadj,
+        adjncy=_fit(jnp.where(valid, cv, 0).astype(jnp.int32), m_max),
+        adjwgt=_fit(jnp.where(valid, w, 0).astype(jnp.int32), m_max),
+        vwgt=_fit(vwgt.astype(jnp.int32), n_max),
+        esrc=_fit(jnp.where(valid, cu, 0).astype(jnp.int32), m_max),
+        n=n_vertices.astype(jnp.int32),
+        m=n_edges.astype(jnp.int32),
+    )
 
 
 def build_csr_host(

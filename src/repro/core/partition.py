@@ -26,6 +26,13 @@ class PartitionConfig:
     c_finest: float = 0.25            # Eq 4.3 ratio, finest level
     c_coarse: float = 0.75            # Eq 4.3 ratio, other levels
     coarse_target: int = 4096         # paper coarsens to 4-8k vertices
+    max_levels: int = 40              # coarsening depth cap
+    stall_ratio: float = 0.95         # terminate when a level shrinks less
+    coarsen_mode: str = "device"      # device (jitted levels) | host (legacy
+                                      # numpy repack) — see DESIGN.md §8
+    bucket_ratio: float = 1.6         # shape-schedule geometric shrink
+    bucket_safety: float = 1.25       # headroom multiplier on the shrink
+    bucket_align: int = 64            # capacity rung alignment
     patience: int = 12                # iterations without a new best
     max_iter: int = 300
     b_max: int = 2                    # weak rebalances before strong
@@ -54,7 +61,15 @@ def partition(g, cfg: PartitionConfig) -> PartitionResult:
     k = cfg.k
     t0 = time.perf_counter()
     levels = co.multilevel_coarsen(
-        g, coarse_target=cfg.coarse_target, seed=cfg.seed
+        g,
+        coarse_target=cfg.coarse_target,
+        max_levels=cfg.max_levels,
+        stall_ratio=cfg.stall_ratio,
+        seed=cfg.seed,
+        mode=cfg.coarsen_mode,
+        bucket_ratio=cfg.bucket_ratio,
+        bucket_safety=cfg.bucket_safety,
+        bucket_align=cfg.bucket_align,
     )
     t_coarsen = time.perf_counter() - t0
 
@@ -70,12 +85,18 @@ def partition(g, cfg: PartitionConfig) -> PartitionResult:
     # loop, and advanced incrementally after every move list (Alg 4.4).
     for i in range(len(levels) - 1, -1, -1):
         gi = levels[i].graph
+        lv_stats = levels[i].stats
         c = cfg.c_finest if i == 0 else cfg.c_coarse
         parts = jnp.where(gi.vertex_mask(), parts, k).astype(jnp.int32)
-        max_deg = (
-            int(np.max(np.asarray(gi.degrees())))
-            if cfg.backend == "ell" else None
-        )
+        if cfg.backend == "ell":
+            # static max degree from the stats captured during coarsening —
+            # no extra device->host sync per level
+            max_deg = (
+                lv_stats["max_degree"] if lv_stats is not None
+                else int(np.max(np.asarray(gi.degrees())))
+            )
+        else:
+            max_deg = None
         conn0 = cn.build_state(gi, parts, k, cfg.backend,
                                max_degree=max_deg)
         parts, stats = refine.jet_refine(
@@ -94,8 +115,14 @@ def partition(g, cfg: PartitionConfig) -> PartitionResult:
             conn0=conn0,
             max_degree=max_deg,
         )
+        size_stats = (
+            {kk: lv_stats[kk] for kk in ("n", "m", "n_max", "m_max")}
+            if lv_stats is not None
+            else {"n": int(gi.n), "m": int(gi.m),
+                  "n_max": gi.n_max, "m_max": gi.m_max}
+        )
         level_stats.append(
-            {"level": i, "n": int(gi.n), "m": int(gi.m)}
+            {"level": i} | size_stats
             | {kk: int(vv) for kk, vv in stats.items()}
         )
         if i > 0:
@@ -103,6 +130,10 @@ def partition(g, cfg: PartitionConfig) -> PartitionResult:
             parts = co.project_partition(fine.cmap, parts)
             parts = jnp.where(fine.graph.vertex_mask(), parts, k)
     t_uncoarsen = time.perf_counter() - t0
+
+    # shape_schedule rung 0 is the caller's exact capacity, so the finest
+    # parts vector always lines up with g's padding
+    assert parts.shape[0] == g.n_max, (parts.shape, g.n_max)
 
     sizes = metrics.part_sizes(g, parts, k)
     W = g.total_vweight()

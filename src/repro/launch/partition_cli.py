@@ -31,6 +31,20 @@ def main(argv=None):
     ap.add_argument("--rebuild-every", type=int, default=0,
                     help="full ConnState rebuild period inside refinement "
                          "(0=never/incremental, 1=rebuild each iteration)")
+    ap.add_argument("--coarse-target", type=int, default=4096,
+                    help="stop coarsening at this many vertices")
+    ap.add_argument("--max-levels", type=int, default=40,
+                    help="coarsening depth cap")
+    ap.add_argument("--coarsen-mode", default="device",
+                    choices=["device", "host"],
+                    help="device = jitted levels on a static shape schedule; "
+                         "host = legacy per-level numpy repack")
+    ap.add_argument("--bucket-ratio", type=float, default=1.6,
+                    help="shape-schedule geometric shrink per rung")
+    ap.add_argument("--bucket-safety", type=float, default=1.25,
+                    help="headroom multiplier on the rung shrink")
+    ap.add_argument("--bucket-align", type=int, default=64,
+                    help="capacity rung alignment (bucket sharing)")
     ap.add_argument("--init", default="voronoi", choices=["voronoi", "random"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, help="write parts as .npy")
@@ -53,13 +67,23 @@ def main(argv=None):
 
     cfg = PartitionConfig(k=args.k, lam=args.imbalance, phi=args.phi,
                           backend=args.backend, init_method=args.init,
-                          rebuild_every=args.rebuild_every, seed=args.seed)
+                          rebuild_every=args.rebuild_every, seed=args.seed,
+                          coarse_target=args.coarse_target,
+                          max_levels=args.max_levels,
+                          coarsen_mode=args.coarsen_mode,
+                          bucket_ratio=args.bucket_ratio,
+                          bucket_safety=args.bucket_safety,
+                          bucket_align=args.bucket_align)
     res = partition(g, cfg)
     report = {
         "n": int(g.n), "m": int(g.m) // 2, "k": args.k,
         "cut": res.cut, "imbalance": res.imbalance,
         "balanced": res.balanced, "levels": res.levels,
         "times": res.times,
+        "level_stats": [
+            {kk: st[kk] for kk in ("level", "n", "m", "n_max", "m_max")}
+            for st in res.level_stats
+        ],
     }
     print(json.dumps(report, indent=1))
     if args.out:

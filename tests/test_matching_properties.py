@@ -1,0 +1,71 @@
+"""Matching invariants (paper §3.1) across seeds and graph shapes.
+
+Both matching stages must produce a symmetric partial matching
+(``match[match[v]] == v``), never self-match a real vertex, and the two-hop
+pass may only touch previously-unmatched vertices.
+"""
+import numpy as np
+import pytest
+
+from repro.core import coarsen
+from repro.data import graphs as gen
+
+SHAPES = ["grid_64x32", "cube_12", "rmat_12", "smallworld_4k"]
+SEEDS = [0, 1, 7]
+
+
+def _invariants(g, match):
+    n = int(g.n)
+    m = np.asarray(match)[:n]
+    matched = m >= 0
+    # in-range partners
+    assert np.all(m[matched] < n)
+    # no self-match for real vertices
+    assert np.all(m[matched] != np.arange(n)[matched])
+    # symmetric: match[match[v]] == v
+    assert np.array_equal(m[m[matched]], np.arange(n)[matched])
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("name", SHAPES)
+def test_hem_invariants(name, seed):
+    g = gen.suite_graph(name)
+    match = coarsen.heavy_edge_matching(g, seed=seed)
+    _invariants(g, match)
+    # HEM matches are along edges: partner must be a neighbor
+    n = int(g.n)
+    m = np.asarray(match)[:n]
+    xadj = np.asarray(g.xadj)
+    adjncy = np.asarray(g.adjncy)
+    for v in np.flatnonzero(m >= 0)[:64]:
+        assert m[v] in adjncy[xadj[v]: xadj[v + 1]], (v, m[v])
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+@pytest.mark.parametrize("name", SHAPES)
+def test_twohop_invariants(name, seed):
+    g = gen.suite_graph(name)
+    before = coarsen.heavy_edge_matching(g, seed=seed)
+    after = coarsen.twohop_matching(g, before, 64, seed)
+    _invariants(g, after)
+    # only previously-unmatched vertices change
+    n = int(g.n)
+    b = np.asarray(before)[:n]
+    a = np.asarray(after)[:n]
+    already = b >= 0
+    assert np.array_equal(a[already], b[already])
+
+
+def test_twohop_seed_decorrelates():
+    """The satellite fix: twin/relative tie-break hashes take the level seed,
+    so different levels pair differently instead of identically."""
+    g = gen.suite_graph("rmat_12")
+    match = coarsen.heavy_edge_matching(g, seed=0)
+    outs = [np.asarray(coarsen.twohop_matching(g, match, 64, s))[: int(g.n)]
+            for s in (0, 1, 2)]
+    assert any(not np.array_equal(outs[0], o) for o in outs[1:]), (
+        "two-hop pairing identical across seeds — seed not plumbed through"
+    )
+    for o in outs:
+        matched = o >= 0
+        assert np.array_equal(o[o[matched]], np.arange(int(g.n))[matched])
