@@ -7,8 +7,11 @@ Table 2 phase breakdown (coarsen / initial partition / uncoarsen).
 
 Also the device-resident coarsening A/B (DESIGN.md §8): phase timings for
 ``coarsen_mode="host"`` (legacy numpy repack) vs ``"device"`` (one jitted
-kernel per level on the static shape schedule), written to
-``BENCH_partitioner.json``.
+kernel per level on the static shape schedule), and the batched-trials A/B
+(DESIGN.md §9): a sequential T-loop vs one vmapped best-of-T batch, gated
+on per-trial cut equivalence and on the compile count (one
+``uncoarsen_level`` executable per capacity-rung signature regardless of
+T).  All written to ``BENCH_partitioner.json``.
 """
 from __future__ import annotations
 
@@ -24,7 +27,7 @@ from benchmarks.graphs_suite import SUITE, load
 from repro.core import coarsen as co
 from repro.core import initial, metrics
 from repro.core.lp_baseline import constrained_lp_refine
-from repro.core.partition import PartitionConfig, partition
+from repro.core.partition import PartitionConfig, partition, uncoarsen_level
 
 
 def _balance_only(g, parts, k, lam):
@@ -157,20 +160,130 @@ def coarsen_mode_ab(names=None, k=16, coarse_target=1024, reps=2,
     return out
 
 
-def main(quick=False, smoke=False, json_path="BENCH_partitioner.json"):
+def _rung_signatures(res):
+    """Distinct uncoarsen_level compile signatures a run must have hit:
+    (fine n_max, fine m_max, coarse n_max, c-ratio) plus, on the ELL
+    backend, the per-level static max_degree (it sizes the ELL arrays, so
+    it is part of the jit key).  level_stats is ordered coarsest first;
+    the coarsest call projects through the identity cmap (its own
+    capacity)."""
+    cfg = res.config
+    sigs = set()
+    for j, st in enumerate(res.level_stats):
+        nc = st["n_max"] if j == 0 else res.level_stats[j - 1]["n_max"]
+        c = cfg.c_finest if st["level"] == 0 else cfg.c_coarse
+        md = st.get("max_degree") if cfg.backend == "ell" else None
+        sigs.add((st["n_max"], st["m_max"], nc, c, md))
+    return sigs
+
+
+def trials_ab(names=None, k=8, trials=4, coarse_target=512, cfg_extra=None):
+    """Sequential T-loop vs one vmapped best-of-T batch (DESIGN.md §9).
+
+    Gates: (1) every vmapped trial's cut is bit-identical to the sequential
+    run with that trial's seed; (2) the selected best-of-T cut is <= every
+    balanced single-trial cut; (3) the batched run compiles exactly one
+    ``uncoarsen_level`` executable per capacity-rung signature — T rides
+    the batch axis, it never multiplies executables.
+    """
+    if names is None:
+        names = list(SUITE)
+    graphs = {n: load(n) for n in names} if isinstance(names, list) else names
+    out = {}
+    for name, g in graphs.items():
+        base = dict(k=k, coarse_target=coarse_target, **(cfg_extra or {}))
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        seq = [
+            partition(g, PartitionConfig(**base, trials=1, trial_seeds=(t,)))
+            for t in range(trials)
+        ]
+        seq_cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for t in range(trials):
+            partition(g, PartitionConfig(**base, trials=1, trial_seeds=(t,)))
+        seq_warm_s = time.perf_counter() - t0
+
+        jax.clear_caches()
+        cfg_b = PartitionConfig(**base, trials=trials,
+                                trial_seeds=tuple(range(trials)))
+        execs0 = uncoarsen_level._cache_size()
+        t0 = time.perf_counter()
+        res = partition(g, cfg_b)
+        bat_cold_s = time.perf_counter() - t0
+        execs = uncoarsen_level._cache_size() - execs0
+        t0 = time.perf_counter()
+        partition(g, cfg_b)
+        bat_warm_s = time.perf_counter() - t0
+
+        # gate 1: per-trial cut equivalence, bit-identical
+        for t in range(trials):
+            if res.trial_cuts[t] != seq[t].cut:
+                raise AssertionError(
+                    f"{name}: vmapped trial {t} cut {res.trial_cuts[t]} != "
+                    f"sequential cut {seq[t].cut}"
+                )
+        # gate 2: best-of-T never loses to a balanced single trial
+        bal_cuts = [s.cut for s in seq if s.balanced]
+        if bal_cuts and res.cut > min(bal_cuts):
+            raise AssertionError(
+                f"{name}: best-of-{trials} cut {res.cut} > best sequential "
+                f"balanced cut {min(bal_cuts)}"
+            )
+        # gate 3: one executable per rung signature, regardless of T
+        expected = len(_rung_signatures(res))
+        if execs != expected:
+            raise AssertionError(
+                f"{name}: {execs} uncoarsen_level executables for "
+                f"{expected} rung signatures — trial batching must not "
+                f"multiply compiles"
+            )
+        out[name] = {
+            "trials": trials,
+            "trial_cuts": res.trial_cuts,
+            "best_trial": res.best_trial,
+            "best_cut": res.cut,
+            "single_trial_cut": seq[0].cut,
+            "seq_cold_s": seq_cold_s,
+            "seq_warm_s": seq_warm_s,
+            "batch_cold_s": bat_cold_s,
+            "batch_warm_s": bat_warm_s,
+            "warm_speedup": seq_warm_s / max(bat_warm_s, 1e-9),
+            "rung_executables": execs,
+        }
+    return out
+
+
+def main(quick=False, smoke=False, json_path="BENCH_partitioner.json",
+         trials=0):
+    trials_full = trials or 4  # full-run default when --trials is omitted
     report = {}
     if smoke:
         # CI guard: tiny graph, one rep — exercises both coarsening modes
-        # end to end so the bench script can't silently rot.
+        # (and, with --trials N, the batched best-of-N path) end to end so
+        # the bench script can't silently rot.  Smoke runs MERGE into an
+        # existing report so the coarsen and trials smoke steps compose.
         from repro.data import graphs as gen
 
-        ab = coarsen_mode_ab(names={"smoke": gen.grid2d(16, 16)}, k=4,
-                             coarse_target=32, reps=1,
-                             cfg_extra={"max_iter": 40, "patience": 4})
-        report["coarsen_mode_ab"] = ab
+        try:
+            with open(json_path) as f:
+                report = json.load(f)
+        except (OSError, ValueError):
+            report = {}
+        if trials > 1:
+            tab = trials_ab(names={"smoke": gen.grid2d(16, 16)}, k=4,
+                            trials=trials, coarse_target=32,
+                            cfg_extra={"max_iter": 40, "patience": 4})
+            report.setdefault("trials_ab", {}).update(tab)
+            print(json.dumps(tab["smoke"], indent=1))
+        else:
+            ab = coarsen_mode_ab(names={"smoke": gen.grid2d(16, 16)}, k=4,
+                                 coarse_target=32, reps=1,
+                                 cfg_extra={"max_iter": 40, "patience": 4})
+            report.setdefault("coarsen_mode_ab", {}).update(ab)
+            print(json.dumps(ab["smoke"], indent=1))
         with open(json_path, "w") as f:
             json.dump(report, f, indent=1)
-        print(json.dumps(report["coarsen_mode_ab"]["smoke"], indent=1))
         print(f"-> {json_path}")
         return report
 
@@ -188,9 +301,18 @@ def main(quick=False, smoke=False, json_path="BENCH_partitioner.json"):
     for name, rec in ab.items():
         print(f"coarsen_ab/{name}/coarsen_speedup,"
               f"{rec['speedup_coarsen_s']:.3f}")
+    tab = trials_ab(names=["grid", "rmat"] if quick else None,
+                    trials=trials_full)
+    print(f"# trials A/B: sequential {trials_full}-loop vs vmapped batch "
+          "(warm)")
+    for name, rec in tab.items():
+        print(f"trials_ab/{name}/warm_speedup,{rec['warm_speedup']:.3f}")
+        print(f"trials_ab/{name}/best_of_{trials_full}_cut,{rec['best_cut']}")
+        print(f"trials_ab/{name}/single_trial_cut,{rec['single_trial_cut']}")
     report["quality"] = dict(rows)
     report["breakdown"] = dict(rows2)
     report["coarsen_mode_ab"] = ab
+    report["trials_ab"] = tab
     with open(json_path, "w") as f:
         json.dump(report, f, indent=1)
     print(f"-> {json_path}")
@@ -202,6 +324,10 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny graph, 1 rep — CI guard for the bench script")
+    ap.add_argument("--trials", type=int, default=0,
+                    help="trial count for the batched best-of-N A/B "
+                         "(default 4 for full runs); with --smoke, >1 runs "
+                         "the trials smoke instead of the coarsen-mode one")
     ap.add_argument("--json", default="BENCH_partitioner.json")
     a = ap.parse_args()
-    main(quick=a.quick, smoke=a.smoke, json_path=a.json)
+    main(quick=a.quick, smoke=a.smoke, json_path=a.json, trials=a.trials)

@@ -25,6 +25,16 @@ Alg 4.4-style scatter-add deltas (:func:`apply_moves`), and refreshed from
 scratch only on the ``rebuild_every`` escape hatch (:func:`rebuild_state`).
 Incremental and rebuilt state agree bit-exactly (integer arithmetic only);
 tests/test_conn_state.py asserts this.
+
+Batch polymorphism (DESIGN.md §9): every function here is a pure jitted
+function of arrays — no shape-dependent Python branches on values, no host
+reads of traced quantities — so the whole interface lifts under ``jax.vmap``
+over a leading trial axis.  Inside a vmapped trace only genuinely per-trial
+state grows the batch dimension (``mat`` / ``edge_dst_part`` / ``ell_parts``,
+``sizes``, ``cut``); the static ELL adjacency (``ell_nbr``/``ell_wgt``) and
+the graph stay unbatched, and the while-loop carry fixpoint keeps them so.
+The dense backend's batched matrix is O(T·n·k) memory — steer large-T runs
+to ``sorted``/``ell``.
 """
 from __future__ import annotations
 

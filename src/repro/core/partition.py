@@ -1,15 +1,26 @@
-"""The Jet partitioner — multilevel driver (Alg 2.1).
+"""The Jet partitioner — multilevel driver (Alg 2.1) with batched trials.
 
 coarsen -> initial partition (coarsest) -> [project -> Jet refine] per level.
 Host drives the level loop (shapes change per level); everything inside a
 level is jitted.
+
+Trial batching (DESIGN.md §9): the uncoarsening half runs vmapped over T
+independent seed trials on ONE shared hierarchy.  :func:`uncoarsen_level`
+fuses project -> mask -> ConnState build -> Jet refinement into a single
+jitted program keyed on the shape-schedule rung, so kernels compile once
+per rung regardless of T; the best trial (balanced first, then lowest cut —
+the same ordering as Alg 4.1's best tracking) is selected on device and
+only materialized at the finest level.  The uncoarsening phase performs
+exactly ONE blocking host transfer, after the level loop.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -42,6 +53,10 @@ class PartitionConfig:
     init_method: str = "voronoi"      # random|voronoi
     variant: str = "full"             # Jetlp variant (Table 3 ablations)
     seed: int = 0
+    trials: int = 1                   # best-of-N trials, vmapped over one
+                                      # shared hierarchy (DESIGN.md §9)
+    trial_seeds: tuple | None = None  # per-trial init seeds; default
+                                      # (seed, seed+1, ..., seed+trials-1)
 
 
 @dataclass
@@ -54,11 +69,105 @@ class PartitionResult:
     times: dict = field(default_factory=dict)
     level_stats: list = field(default_factory=list)
     config: Any = None
+    trials: int = 1
+    best_trial: int = 0               # index into the trial batch
+    trial_cuts: list = field(default_factory=list)      # per-trial best cut
+    trial_balanced: list = field(default_factory=list)  # per-trial balance
+    trial_parts: Any = None           # (T, n_max) finest-level parts batch
+
+
+def _resolve_trial_seeds(cfg: PartitionConfig) -> tuple:
+    if cfg.trials < 1:
+        raise ValueError(f"trials must be >= 1, got {cfg.trials}")
+    if cfg.trial_seeds is None:
+        return tuple(cfg.seed + t for t in range(cfg.trials))
+    seeds = tuple(int(s) for s in cfg.trial_seeds)
+    if len(seeds) != cfg.trials:
+        raise ValueError(
+            f"trial_seeds has {len(seeds)} entries but trials={cfg.trials}"
+        )
+    return seeds
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "k", "lam", "c", "backend", "patience", "max_iter", "b_max",
+        "variant", "rebuild_every", "max_degree",
+    ),
+)
+def uncoarsen_level(
+    fine,
+    cmap: jnp.ndarray,
+    parts_batch: jnp.ndarray,
+    phi,
+    *,
+    k: int,
+    lam: float,
+    c: float,
+    backend: str,
+    patience: int,
+    max_iter: int,
+    b_max: int,
+    variant: str,
+    rebuild_every: int,
+    max_degree: int | None = None,
+):
+    """One uncoarsening level, fused and vmapped over the trial axis.
+
+    project -> ghost-mask -> ConnState build -> Jet refinement loop as a
+    single XLA program.  ``parts_batch`` is (T, nc_max) coarse parts (pass
+    the identity cmap at the coarsest level); returns the refined (T,
+    n_max) batch plus per-trial stats arrays, all shape (T,).
+
+    Compilation is keyed on the capacity rung — (fine.n_max, fine.m_max,
+    nc_max, T) plus the static knobs — so re-running on a same-bucket level
+    hits the cache.  Static per-trial arrays (the graph, the ELL adjacency)
+    stay unbatched inside the vmap: only genuinely per-trial state carries
+    a T axis (see DESIGN.md §9 for the ConnState batch-polymorphism rules).
+    """
+
+    def one_trial(parts_coarse):
+        parts = co.project_partition(cmap, parts_coarse)
+        parts = jnp.where(fine.vertex_mask(), parts, k).astype(jnp.int32)
+        conn0 = cn.build_state(fine, parts, k, backend, max_degree=max_degree)
+        return refine._refine_loop(
+            fine, parts, conn0, phi,
+            k=k, lam=lam, c=c, backend=backend, patience=patience,
+            max_iter=max_iter, b_max=b_max, variant=variant,
+            rebuild_every=rebuild_every,
+        )
+
+    return jax.vmap(one_trial)(parts_batch)
+
+
+def _best_trial(balanced: jnp.ndarray, cut: jnp.ndarray,
+                maxsize: jnp.ndarray) -> jnp.ndarray:
+    """Device-side best-of-T selection (same ordering as Alg 4.1's best
+    tracking): a balanced trial always beats an unbalanced one; among
+    balanced trials the lowest cut wins; if no trial balanced, the lowest
+    max part weight wins with the lower cut breaking ties.  ``argmin``
+    takes the first index on remaining ties, so selection is deterministic.
+    """
+    INF = jnp.int32(0x7FFFFFFF)
+    idx_bal = jnp.argmin(jnp.where(balanced, cut, INF)).astype(jnp.int32)
+    m0 = jnp.min(maxsize)
+    idx_imb = jnp.argmin(jnp.where(maxsize == m0, cut, INF)).astype(jnp.int32)
+    return jnp.where(jnp.any(balanced), idx_bal, idx_imb)
 
 
 def partition(g, cfg: PartitionConfig) -> PartitionResult:
-    """Full multilevel partition of ``g`` into ``cfg.k`` parts."""
+    """Full multilevel partition of ``g`` into ``cfg.k`` parts.
+
+    With ``cfg.trials = T > 1``, the whole uncoarsening phase runs vmapped
+    over T seed trials on the shared hierarchy and the returned partition
+    is the device-selected best trial; ``trial_cuts`` / ``trial_balanced``
+    / ``trial_parts`` expose the full batch.  Trial ``t`` is bit-identical
+    to a ``trials=1`` run with ``trial_seeds=(seeds[t],)``.
+    """
     k = cfg.k
+    seeds = _resolve_trial_seeds(cfg)
+    trials = cfg.trials
     t0 = time.perf_counter()
     levels = co.multilevel_coarsen(
         g,
@@ -75,19 +184,21 @@ def partition(g, cfg: PartitionConfig) -> PartitionResult:
 
     t0 = time.perf_counter()
     gc = levels[-1].graph
-    parts = initial.initial_partition(gc, k, seed=cfg.seed, method=cfg.init_method)
+    parts_b = initial.initial_partition_batch(gc, k, seeds,
+                                              method=cfg.init_method)
     t_init = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    level_stats = []
-    # refine coarsest, then uncoarsen.  The driver owns the per-level
-    # ConnState: built once here, threaded through the whole refinement
-    # loop, and advanced incrementally after every move list (Alg 4.4).
+    # refine coarsest, then uncoarsen.  Each level is ONE jitted
+    # `uncoarsen_level` call (project -> mask -> ConnState build -> Alg 4.1
+    # loop) vmapped over the trial axis; per-trial stats stay on device and
+    # are fetched in a single transfer after the loop.
+    stats_per_level = []   # dicts of (T,) traced stat arrays, coarsest first
+    meta_per_level = []    # host-side size stats captured during coarsening
     for i in range(len(levels) - 1, -1, -1):
         gi = levels[i].graph
         lv_stats = levels[i].stats
         c = cfg.c_finest if i == 0 else cfg.c_coarse
-        parts = jnp.where(gi.vertex_mask(), parts, k).astype(jnp.int32)
         if cfg.backend == "ell":
             # static max degree from the stats captured during coarsening —
             # no extra device->host sync per level
@@ -97,51 +208,74 @@ def partition(g, cfg: PartitionConfig) -> PartitionResult:
             )
         else:
             max_deg = None
-        conn0 = cn.build_state(gi, parts, k, cfg.backend,
-                               max_degree=max_deg)
-        parts, stats = refine.jet_refine(
-            gi,
-            parts,
-            k,
-            lam=cfg.lam,
-            c=c,
-            phi=cfg.phi,
-            backend=cfg.backend,
-            patience=cfg.patience,
-            max_iter=cfg.max_iter,
-            b_max=cfg.b_max,
-            variant=cfg.variant,
-            rebuild_every=cfg.rebuild_every,
-            conn0=conn0,
+        if i == len(levels) - 1:
+            # coarsest level: no projection — the identity cmap keeps the
+            # call signature (and therefore the compiled executable) shared
+            cmap = jnp.arange(gi.n_max, dtype=jnp.int32)
+        else:
+            cmap = levels[i].cmap
+        parts_b, stats = uncoarsen_level(
+            gi, cmap, parts_b, cfg.phi,
+            k=k, lam=cfg.lam, c=c, backend=cfg.backend,
+            patience=cfg.patience, max_iter=cfg.max_iter, b_max=cfg.b_max,
+            variant=cfg.variant, rebuild_every=cfg.rebuild_every,
             max_degree=max_deg,
         )
-        size_stats = (
-            {kk: lv_stats[kk] for kk in ("n", "m", "n_max", "m_max")}
+        stats_per_level.append(stats)
+        meta = (
+            {kk: lv_stats[kk] for kk in ("n", "m", "n_max", "m_max",
+                                         "max_degree")}
             if lv_stats is not None
             else {"n": int(gi.n), "m": int(gi.m),
                   "n_max": gi.n_max, "m_max": gi.m_max}
         )
-        level_stats.append(
-            {"level": i} | size_stats
-            | {kk: int(vv) for kk, vv in stats.items()}
-        )
-        if i > 0:
-            fine = levels[i - 1]
-            parts = co.project_partition(fine.cmap, parts)
-            parts = jnp.where(fine.graph.vertex_mask(), parts, k)
-    t_uncoarsen = time.perf_counter() - t0
+        if max_deg is not None:
+            meta["max_degree"] = max_deg
+        meta_per_level.append({"level": i} | meta)
 
     # shape_schedule rung 0 is the caller's exact capacity, so the finest
-    # parts vector always lines up with g's padding
-    assert parts.shape[0] == g.n_max, (parts.shape, g.n_max)
+    # parts batch always lines up with g's padding
+    assert parts_b.shape[1] == g.n_max, (parts_b.shape, g.n_max)
 
+    # device epilogue: best-trial selection + final metrics, then the ONE
+    # blocking transfer of the whole uncoarsening phase
+    fstats = stats_per_level[-1]
+    best_idx = _best_trial(
+        fstats["best_balanced"], fstats["best_cost"], fstats["best_maxsize"]
+    )
+    parts = parts_b[best_idx]
     sizes = metrics.part_sizes(g, parts, k)
     W = g.total_vweight()
+    fetch = {
+        "stats": {
+            kk: jnp.stack([s[kk] for s in stats_per_level])  # (L, T)
+            for kk in stats_per_level[0]
+        },
+        "best_idx": best_idx,
+        "cut": metrics.cutsize(g, parts),
+        "imbalance": metrics.imbalance(sizes, W, k),
+        "balanced": metrics.is_balanced(sizes, W, k, cfg.lam),
+        "trial_cuts": fstats["best_cost"],
+        "trial_balanced": fstats["best_balanced"],
+    }
+    host = jax.device_get(fetch)
+    t_uncoarsen = time.perf_counter() - t0
+
+    level_stats = []
+    for j, meta in enumerate(meta_per_level):
+        per = {kk: host["stats"][kk][j] for kk in host["stats"]}
+        if trials == 1:
+            level_stats.append(meta | {kk: int(vv[0]) for kk, vv in per.items()})
+        else:
+            level_stats.append(
+                meta | {kk: [int(x) for x in vv] for kk, vv in per.items()}
+            )
+
     return PartitionResult(
         parts=parts,
-        cut=int(metrics.cutsize(g, parts)),
-        imbalance=float(metrics.imbalance(sizes, W, k)),
-        balanced=bool(metrics.is_balanced(sizes, W, k, cfg.lam)),
+        cut=int(host["cut"]),
+        imbalance=float(host["imbalance"]),
+        balanced=bool(host["balanced"]),
         levels=len(levels),
         times={
             "coarsen_s": t_coarsen,
@@ -151,12 +285,24 @@ def partition(g, cfg: PartitionConfig) -> PartitionResult:
         },
         level_stats=level_stats,
         config=cfg,
+        trials=trials,
+        best_trial=int(host["best_idx"]),
+        trial_cuts=[int(x) for x in host["trial_cuts"]],
+        trial_balanced=[bool(x) for x in host["trial_balanced"]],
+        trial_parts=parts_b,
     )
 
 
 def refine_only(g, parts0, cfg: PartitionConfig) -> PartitionResult:
     """Refinement-effectiveness mode: refine an imported partition on the
     finest graph only (paper §5.1 effectiveness tests)."""
+    if cfg.backend == "ell":
+        # static ELL width resolved ONCE, up front — not mid-call inside
+        # jet_refine, which would block the device queue between the parts
+        # normalization and the loop launch
+        max_deg = int(np.max(np.asarray(g.degrees())))
+    else:
+        max_deg = None
     parts, stats = refine.jet_refine(
         g,
         jnp.asarray(np.asarray(parts0), dtype=jnp.int32),
@@ -170,6 +316,7 @@ def refine_only(g, parts0, cfg: PartitionConfig) -> PartitionResult:
         b_max=cfg.b_max,
         variant=cfg.variant,
         rebuild_every=cfg.rebuild_every,
+        max_degree=max_deg,
     )
     sizes = metrics.part_sizes(g, parts, cfg.k)
     W = g.total_vweight()

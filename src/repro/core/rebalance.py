@@ -5,6 +5,11 @@ TPU has no equivalent, so we realize the *same partial order* with a stable
 sort on (part, slot) keys, then select eviction prefixes with a segmented
 cumulative sum.  Theorem 4.1's 2x bound depends only on the slot
 quantization, which we keep verbatim — tests/test_properties.py checks it.
+
+Batch polymorphism (DESIGN.md §9): both move kernels are pure functions of
+arrays (stable sorts, cumsums, searchsorted — all with per-row vmap rules),
+so they lift under ``jax.vmap`` over a trial axis unchanged; per-trial
+sizes/limits come in through the threaded ConnState and stay traced.
 """
 from __future__ import annotations
 

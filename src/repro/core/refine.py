@@ -18,6 +18,14 @@ fallback, 0 == never).  All three iteration kinds consume the same
 Deviations from the paper are documented in DESIGN.md §6; the functional
 behaviour (filters, afterburner ordering, locking, best-partition tracking
 with the phi tolerance) follows the paper line by line.
+
+Batch polymorphism (DESIGN.md §9): ``_refine_loop`` (and everything it
+calls — ``jetlp_moves``, the rebalance kernels, the ConnState interface) is
+vmappable over a leading trial axis.  Traced stats stay traced; the loop
+condition is per-trial, and JAX's ``while_loop`` batching rule freezes a
+trial's carry once its own condition goes false, so a vmapped trial walks
+the exact trajectory of its sequential run — the batch merely runs until
+the LAST trial's patience expires.
 """
 from __future__ import annotations
 

@@ -47,6 +47,13 @@ def main(argv=None):
                     help="capacity rung alignment (bucket sharing)")
     ap.add_argument("--init", default="voronoi", choices=["voronoi", "random"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trials", type=int, default=None,
+                    help="best-of-N trials, vmapped over one shared "
+                         "hierarchy; the balanced lowest-cut trial wins "
+                         "(default: len(--trial-seeds), else 1)")
+    ap.add_argument("--trial-seeds", default=None,
+                    help="comma-separated per-trial init seeds "
+                         "(default: seed..seed+trials-1)")
     ap.add_argument("--out", default=None, help="write parts as .npy")
     args = ap.parse_args(argv)
 
@@ -65,6 +72,12 @@ def main(argv=None):
     else:
         g = gen.small_world(args.size * args.size, seed=args.seed)
 
+    trial_seeds = (
+        tuple(int(s) for s in args.trial_seeds.split(","))
+        if args.trial_seeds else None
+    )
+    if args.trials is None:  # the seed list determines the trial count
+        args.trials = len(trial_seeds) if trial_seeds else 1
     cfg = PartitionConfig(k=args.k, lam=args.imbalance, phi=args.phi,
                           backend=args.backend, init_method=args.init,
                           rebuild_every=args.rebuild_every, seed=args.seed,
@@ -73,12 +86,15 @@ def main(argv=None):
                           coarsen_mode=args.coarsen_mode,
                           bucket_ratio=args.bucket_ratio,
                           bucket_safety=args.bucket_safety,
-                          bucket_align=args.bucket_align)
+                          bucket_align=args.bucket_align,
+                          trials=args.trials, trial_seeds=trial_seeds)
     res = partition(g, cfg)
     report = {
         "n": int(g.n), "m": int(g.m) // 2, "k": args.k,
         "cut": res.cut, "imbalance": res.imbalance,
         "balanced": res.balanced, "levels": res.levels,
+        "trials": res.trials, "best_trial": res.best_trial,
+        "trial_cuts": res.trial_cuts, "trial_balanced": res.trial_balanced,
         "times": res.times,
         "level_stats": [
             {kk: st[kk] for kk in ("level", "n", "m", "n_max", "m_max")}
