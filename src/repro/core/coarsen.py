@@ -416,6 +416,143 @@ def select_capacity(
     return (n_cap, m_cap)
 
 
+# ---------------------------------------------------------------------------
+# Fleet coarsening — vmapped levels over a shape bucket (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+class FleetLevel(NamedTuple):
+    """One level of a bucket's batched hierarchy.
+
+    ``graph`` is a stacked ``(B, ...)`` :class:`Graph`; ``cmap`` is
+    ``(B, n_max)`` into the next level (identity rows for frozen lanes;
+    None at the coarsest level).  ``active[b]`` says lane ``b`` is still
+    *real* at this level — its own hierarchy reaches this deep, so the
+    uncoarsening driver runs refinement for it here; frozen lanes pass
+    their partition through untouched.  ``stats`` holds per-lane host
+    numbers (``n``/``m``/``max_degree`` as (B,) arrays) plus the shared
+    ``n_max``/``m_max`` capacity ints.
+    """
+
+    graph: Graph
+    cmap: jnp.ndarray | None
+    active: np.ndarray
+    stats: dict | None
+
+
+@jax.jit
+def _stats_fleet(gb: Graph) -> jnp.ndarray:
+    """(B, 3) int32 per-lane (n, m, max_degree) — one transfer per level."""
+    return jax.vmap(_level_stats_dev)(gb)
+
+
+@jax.jit
+def _coarsen_step_fleet(gb: Graph, seed, twohop_threshold, mm_max_degree):
+    """One coarsening level for every lane of a bucket, plus its stats.
+
+    ``seed``/thresholds are traced scalars shared by all lanes, exactly as
+    the standalone driver passes them — a lane's matching trajectory is the
+    one its solo run would walk (the two-hop ``lax.cond`` select-masks per
+    lane under vmap).
+    """
+
+    def one(g):
+        gc, cmap = coarsen_level(g, seed, twohop_threshold, mm_max_degree)
+        return gc, cmap, _level_stats_dev(gc)
+
+    return jax.vmap(one)(gb)
+
+
+@partial(jax.jit, static_argnames=("n_max", "m_max"))
+def _freeze_rebucket_fleet(
+    gc: Graph, cmap: jnp.ndarray, fine: Graph, success: jnp.ndarray,
+    *, n_max: int, m_max: int,
+) -> tuple[Graph, jnp.ndarray]:
+    """Select-mask failed lanes back to their fine graph, then re-bucket.
+
+    Lanes that terminated (reached ``coarse_target`` earlier, or stalled
+    this level) keep their fine graph frozen with an identity cmap — the
+    batched analogue of the standalone driver's ``break``.  All lanes are
+    then re-bucketed to the shared next capacity, which is selected to fit
+    the batch max per axis, so frozen lanes always fit.
+    """
+
+    def one(gc_i, cmap_i, fine_i, s):
+        g = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(s, a, b), gc_i, fine_i
+        )
+        ident = jnp.arange(cmap_i.shape[0], dtype=jnp.int32)
+        return g.with_capacity(n_max, m_max), jnp.where(s, cmap_i, ident)
+
+    return jax.vmap(one)(gc, cmap, fine, success)
+
+
+def multilevel_coarsen_fleet(
+    gb: Graph,
+    schedule: tuple[tuple[int, int], ...],
+    coarse_target: int = 4096,
+    max_levels: int = 40,
+    stall_ratio: float = 0.95,
+    seed: int = 0,
+    twohop_threshold: float = 0.25,
+    mm_max_degree: int = 64,
+) -> list[FleetLevel]:
+    """Batched MLCoarsen over one shape bucket: list of levels, finest first.
+
+    The whole bucket advances in lockstep — batch level ``i`` is every
+    lane's own level ``i`` — but each lane terminates on ITS own schedule
+    (``coarse_target`` / ``stall_ratio`` / ``max_levels``), mirroring the
+    standalone driver's per-graph ``break``s via select-masking: a
+    terminated lane's graph rides along frozen (identity cmap) and its
+    ``active`` flag goes false for all deeper levels.  Per-level host syncs
+    are one (B, 3) stat fetch, same cadence as the standalone driver.
+    """
+    B = gb.vwgt.shape[0]
+    n_max, m_max = gb.vwgt.shape[1], gb.adjncy.shape[1]
+    st0 = np.asarray(_stats_fleet(gb))
+    n, m, md = (st0[:, j].astype(np.int64) for j in range(3))
+    if schedule[0][0] < n_max or schedule[0][1] < m_max:
+        raise ValueError(
+            f"schedule rung 0 {schedule[0]} is below the bucket capacity "
+            f"({n_max}, {m_max}) — bucket with bucket_graphs first"
+        )
+    dead = np.zeros(B, bool)
+    depth = np.zeros(B, np.int64)
+    raw: list[tuple] = []
+    for lvl in range(max_levels):
+        active = ~dead & (n > coarse_target)
+        if not active.any():
+            break
+        gc, cmap, stc = _coarsen_step_fleet(
+            gb, seed + lvl, twohop_threshold, mm_max_degree
+        )
+        stc = np.asarray(stc).astype(np.int64)  # the per-level host sync
+        stalled = stc[:, 0] > stall_ratio * n
+        success = active & ~stalled
+        dead |= active & stalled
+        if not success.any():
+            break
+        new_n = np.where(success, stc[:, 0], n)
+        new_m = np.where(success, stc[:, 1], m)
+        new_md = np.where(success, stc[:, 2], md)
+        cap = select_capacity(schedule, int(new_n.max()), int(new_m.max()))
+        gb2, cmap = _freeze_rebucket_fleet(
+            gc, cmap, gb, jnp.asarray(success), n_max=cap[0], m_max=cap[1]
+        )
+        raw.append((gb, cmap,
+                    {"n": n, "m": m, "max_degree": md,
+                     "n_max": n_max, "m_max": m_max}))
+        depth += success
+        gb, n, m, md = gb2, new_n, new_m, new_md
+        n_max, m_max = cap
+    raw.append((gb, None, {"n": n, "m": m, "max_degree": md,
+                           "n_max": n_max, "m_max": m_max}))
+    return [
+        FleetLevel(graph=g, cmap=c, active=depth >= i, stats=s)
+        for i, (g, c, s) in enumerate(raw)
+    ]
+
+
 def multilevel_coarsen(
     g: Graph,
     coarse_target: int = 4096,

@@ -26,15 +26,18 @@ scratch only on the ``rebuild_every`` escape hatch (:func:`rebuild_state`).
 Incremental and rebuilt state agree bit-exactly (integer arithmetic only);
 tests/test_conn_state.py asserts this.
 
-Batch polymorphism (DESIGN.md §9): every function here is a pure jitted
+Batch polymorphism (DESIGN.md §§9-10): every function here is a pure jitted
 function of arrays — no shape-dependent Python branches on values, no host
 reads of traced quantities — so the whole interface lifts under ``jax.vmap``
-over a leading trial axis.  Inside a vmapped trace only genuinely per-trial
-state grows the batch dimension (``mat`` / ``edge_dst_part`` / ``ell_parts``,
-``sizes``, ``cut``); the static ELL adjacency (``ell_nbr``/``ell_wgt``) and
-the graph stay unbatched, and the while-loop carry fixpoint keeps them so.
-The dense backend's batched matrix is O(T·n·k) memory — steer large-T runs
-to ``sorted``/``ell``.
+over a leading trial axis, and again over a leading graph axis (the fleet
+path vmaps graphs × trials).  Inside a trial-vmapped trace only genuinely
+per-trial state grows the batch dimension (``mat`` / ``edge_dst_part`` /
+``ell_parts``, ``sizes``, ``cut``); the static ELL adjacency
+(``ell_nbr``/``ell_wgt``) and the graph stay unbatched, and the while-loop
+carry fixpoint keeps them so.  Under the outer graph vmap the graph and the
+ELL adjacency DO carry the B axis (each lane is a different graph), stored
+once per lane, not once per (lane, trial).  The dense backend's batched
+matrix is O(B·T·n·k) memory — steer large-T/B runs to ``sorted``/``ell``.
 """
 from __future__ import annotations
 

@@ -83,6 +83,78 @@ class Graph(NamedTuple):
         )
 
 
+# ---------------------------------------------------------------------------
+# Fleet batching — stacked graphs and shape buckets (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+def stack_graphs(graphs: "list[Graph]") -> Graph:
+    """Stack same-capacity graphs along a leading batch axis.
+
+    The result is a plain :class:`Graph` pytree whose every leaf carries a
+    leading ``(B, ...)`` axis — built for ``jax.vmap`` consumers (the fleet
+    drivers).  The ``n_max`` / ``m_max`` properties read leaf ``shape[0]``
+    and are therefore meaningless on a stacked graph; use the per-leaf
+    shapes (``vwgt.shape == (B, N)``) or :func:`unstack_graph` instead.
+    """
+    if not graphs:
+        raise ValueError("stack_graphs needs at least one graph")
+    cap = (graphs[0].n_max, graphs[0].m_max)
+    for g in graphs[1:]:
+        if (g.n_max, g.m_max) != cap:
+            raise ValueError(
+                f"stack_graphs needs uniform capacities, got {cap} vs "
+                f"{(g.n_max, g.m_max)} — re-bucket with with_capacity first"
+            )
+    return Graph(*(
+        jnp.stack([getattr(g, f) for g in graphs]) for f in Graph._fields
+    ))
+
+
+def unstack_graph(gb: Graph, b: int) -> Graph:
+    """Member ``b`` of a stacked graph (device-side slice, no copy)."""
+    return Graph(*(leaf[b] for leaf in gb))
+
+
+def bucket_graphs(
+    graphs: "list[Graph]",
+    ratio: float = 1.6,
+    safety: float = 1.25,
+    stall_ratio: float = 0.95,
+    align: int = 64,
+):
+    """Group a fleet of graphs into static shape buckets on a shared ladder.
+
+    Builds ONE §8 capacity ladder spanning the whole fleet (top rung =
+    fleet max, aligned to ``align``) and assigns each graph the smallest
+    fitting ``(n_cap, m_cap)`` rung pair, chosen per axis like
+    :func:`~repro.core.coarsen.select_capacity`.  Graphs of different true
+    sizes land in the same bucket whenever they round to the same rungs —
+    that sharing is the whole point: one compiled executable per (bucket,
+    level-rung) signature serves every member.
+
+    Returns ``(schedule, buckets)`` where ``buckets`` maps a capacity pair
+    to the list of graph indices assigned to it (insertion-ordered by first
+    member).  Admission is a host decision, so it costs one blocking fetch
+    of all (n, m) pairs here — the last admission sync before results.
+    """
+    import jax
+
+    from repro.core.coarsen import select_capacity, shape_schedule, _round_up
+
+    if not graphs:
+        raise ValueError("bucket_graphs needs at least one graph")
+    sizes = [(int(n), int(m))
+             for n, m in jax.device_get([(g.n, g.m) for g in graphs])]
+    n_top = _round_up(max(max(n for n, _ in sizes), 1), align)
+    m_top = _round_up(max(max(m for _, m in sizes), 1), align)
+    schedule = shape_schedule(n_top, m_top, ratio=ratio, safety=safety,
+                              stall_ratio=stall_ratio, align=align)
+    buckets: dict[tuple[int, int], list[int]] = {}
+    for i, (n, m) in enumerate(sizes):
+        buckets.setdefault(select_capacity(schedule, n, m), []).append(i)
+    return schedule, buckets
+
+
 def csr_from_edge_runs(
     cu: jnp.ndarray,
     cv: jnp.ndarray,

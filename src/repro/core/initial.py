@@ -102,7 +102,13 @@ def spread_seeds(g: Graph, k: int, seed=0) -> jnp.ndarray:
     s = _seed32(seed)
     h = (vid ^ (s * jnp.uint32(104729) + jnp.uint32(7))) * _KNUTH
     h = jnp.where(g.vertex_mask(), h >> jnp.uint32(1), _PAD_KEY)
-    cand = jnp.argsort(h)[:k].astype(jnp.int32)
+    cand = jnp.argsort(h)[: min(k, g.n_max)].astype(jnp.int32)
+    if k > g.n_max:
+        # k exceeds even the padded capacity: the missing candidates are
+        # forced onto the round-robin fallback below (id n_max is never < n)
+        cand = jnp.concatenate([
+            cand, jnp.full((k - g.n_max,), g.n_max, jnp.int32)
+        ])
     fallback = jnp.arange(k, dtype=jnp.int32) % jnp.maximum(g.n, 1)
     return jnp.where(cand < g.n, cand, fallback)
 
@@ -145,3 +151,28 @@ def initial_partition_batch(
     if seeds.ndim != 1:
         raise ValueError(f"seeds must be 1-D (one per trial), got {seeds.shape}")
     return _initial_batch(g, seeds, k, method)
+
+
+@partial(jax.jit, static_argnames=("k", "method"))
+def _initial_fleet(gb: Graph, seeds: jnp.ndarray, k: int, method: str):
+    fn = random_partition if method == "random" else voronoi_partition
+    return jax.vmap(lambda g: jax.vmap(lambda s: fn(g, k, s))(seeds))(gb)
+
+
+def initial_partition_fleet(
+    gb: Graph, k: int, seeds, method: str = "voronoi"
+) -> jnp.ndarray:
+    """(B, T, n_max) seeded initial partitions over a stacked graph batch.
+
+    Lane ``b``, trial ``t`` is bit-identical to
+    ``initial_partition(unstack_graph(gb, b), k, seeds[t])`` — the same
+    §9 argument as :func:`initial_partition_batch`, lifted over the graph
+    axis (all hashing is elementwise and mask-aware, so a lane's values
+    never depend on its padding or on its bucket-mates).
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown initial partition method {method!r}")
+    seeds = jnp.asarray(seeds, dtype=jnp.int32)
+    if seeds.ndim != 1:
+        raise ValueError(f"seeds must be 1-D (one per trial), got {seeds.shape}")
+    return _initial_fleet(gb, seeds, k, method)

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core import coarsen as co
 from repro.core import connectivity as cn
+from repro.core import graph as gr
 from repro.core import initial, metrics, refine
 
 
@@ -89,6 +90,34 @@ def _resolve_trial_seeds(cfg: PartitionConfig) -> tuple:
     return seeds
 
 
+def _uncoarsen_trials(
+    fine, cmap, parts_batch, phi, active, *,
+    k, lam, c, backend, patience, max_iter, b_max, variant, rebuild_every,
+    max_degree,
+):
+    """project -> ghost-mask -> build_state -> Alg 4.1 loop, vmapped over T.
+
+    The shared body of :func:`uncoarsen_level` (trial batching) and
+    :func:`uncoarsen_level_fleet` (graph × trial batching).  ``active`` is
+    None on the single-graph path; on the fleet path it is the lane's
+    refine-active flag, threaded into the loop condition so frozen lanes
+    pass their (identity-projected) partition through untouched.
+    """
+
+    def one_trial(parts_coarse):
+        parts = co.project_partition(cmap, parts_coarse)
+        parts = jnp.where(fine.vertex_mask(), parts, k).astype(jnp.int32)
+        conn0 = cn.build_state(fine, parts, k, backend, max_degree=max_degree)
+        return refine._refine_loop(
+            fine, parts, conn0, phi,
+            k=k, lam=lam, c=c, backend=backend, patience=patience,
+            max_iter=max_iter, b_max=b_max, variant=variant,
+            rebuild_every=rebuild_every, active=active,
+        )
+
+    return jax.vmap(one_trial)(parts_batch)
+
+
 @partial(
     jax.jit,
     static_argnames=(
@@ -126,19 +155,62 @@ def uncoarsen_level(
     stay unbatched inside the vmap: only genuinely per-trial state carries
     a T axis (see DESIGN.md §9 for the ConnState batch-polymorphism rules).
     """
+    return _uncoarsen_trials(
+        fine, cmap, parts_batch, phi, None,
+        k=k, lam=lam, c=c, backend=backend, patience=patience,
+        max_iter=max_iter, b_max=b_max, variant=variant,
+        rebuild_every=rebuild_every, max_degree=max_degree,
+    )
 
-    def one_trial(parts_coarse):
-        parts = co.project_partition(cmap, parts_coarse)
-        parts = jnp.where(fine.vertex_mask(), parts, k).astype(jnp.int32)
-        conn0 = cn.build_state(fine, parts, k, backend, max_degree=max_degree)
-        return refine._refine_loop(
-            fine, parts, conn0, phi,
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "k", "lam", "c", "backend", "patience", "max_iter", "b_max",
+        "variant", "rebuild_every", "max_degree",
+    ),
+)
+def uncoarsen_level_fleet(
+    fine,
+    cmap: jnp.ndarray,
+    parts_batch: jnp.ndarray,
+    active: jnp.ndarray,
+    phi,
+    *,
+    k: int,
+    lam: float,
+    c: float,
+    backend: str,
+    patience: int,
+    max_iter: int,
+    b_max: int,
+    variant: str,
+    rebuild_every: int,
+    max_degree: int | None = None,
+):
+    """One uncoarsening level vmapped over graphs × trials (DESIGN.md §10).
+
+    ``fine`` is a stacked (B, ...) graph at this level's shared bucket
+    capacity, ``cmap`` (B, n_max), ``parts_batch`` (B, T, nc_max), and
+    ``active`` (B,) bool — the per-lane refine flag from the batched
+    coarsening driver.  Inactive lanes (their own hierarchy is shallower
+    than the bucket's) project through their identity cmap and skip the
+    refinement loop entirely: their loop condition is false at iteration 0,
+    so the carry freezes and the partition passes through bit-untouched.
+
+    Compilation is keyed on (B, T, rung shapes) plus the static knobs —
+    one executable per (rung, k) signature serves all B lanes and T trials.
+    """
+
+    def one_graph(g, cm, pb, act):
+        return _uncoarsen_trials(
+            g, cm, pb, phi, act,
             k=k, lam=lam, c=c, backend=backend, patience=patience,
             max_iter=max_iter, b_max=b_max, variant=variant,
-            rebuild_every=rebuild_every,
+            rebuild_every=rebuild_every, max_degree=max_degree,
         )
 
-    return jax.vmap(one_trial)(parts_batch)
+    return jax.vmap(one_graph)(fine, cmap, parts_batch, active)
 
 
 def _best_trial(balanced: jnp.ndarray, cut: jnp.ndarray,
@@ -154,6 +226,231 @@ def _best_trial(balanced: jnp.ndarray, cut: jnp.ndarray,
     m0 = jnp.min(maxsize)
     idx_imb = jnp.argmin(jnp.where(maxsize == m0, cut, INF)).astype(jnp.int32)
     return jnp.where(jnp.any(balanced), idx_bal, idx_imb)
+
+
+@partial(jax.jit, static_argnames=("k", "lam"))
+def _fleet_epilogue(gb, parts_bt, best_balanced, best_cost, best_maxsize,
+                    *, k: int, lam: float):
+    """Per-lane best-trial selection + final metrics, all on device."""
+
+    def one(g, parts_t, bb, bc, bm):
+        idx = _best_trial(bb, bc, bm)
+        parts = parts_t[idx]
+        sizes = metrics.part_sizes(g, parts, k)
+        W = g.total_vweight()
+        return {
+            "best_idx": idx,
+            "parts": parts,
+            "cut": metrics.cutsize(g, parts),
+            "imbalance": metrics.imbalance(sizes, W, k),
+            "balanced": metrics.is_balanced(sizes, W, k, lam),
+        }
+
+    return jax.vmap(one)(gb, parts_bt, best_balanced, best_cost, best_maxsize)
+
+
+@dataclass
+class FleetBucket:
+    """Host-side record of one shape bucket's run (for reports and the
+    executable-count accounting in ``bench_partitioner.fleet_ab``)."""
+
+    capacity: tuple          # (n_cap, m_cap) rung-0 capacity of the bucket
+    indices: list            # fleet indices of the member graphs
+    levels: int              # batched hierarchy depth (levels list length)
+    level_stats: list = field(default_factory=list)  # coarsest-first metas
+
+
+@dataclass
+class FleetResult:
+    """``partition_fleet`` output: per-graph results in input order plus
+    the bucket/schedule accounting."""
+
+    results: list            # list[PartitionResult], input order
+    buckets: list            # list[FleetBucket]
+    times: dict = field(default_factory=dict)
+    trials: int = 1
+    config: Any = None
+
+
+def partition_fleet(graphs, cfg: PartitionConfig) -> FleetResult:
+    """Partition a fleet of graphs as shape-bucketed batched V-cycles.
+
+    Graphs are grouped into static shape buckets on one shared §8 capacity
+    ladder (`graph.bucket_graphs`); each bucket's members are stacked along
+    a leading batch axis and run through coarsening, initial partitioning,
+    and uncoarsening vmapped over B graphs × T trials — one jitted
+    executable per (rung, k) signature serves the whole bucket.  Per-graph
+    termination (coarsening depth, stalls) is select-masked per lane, so
+    every graph's cut and parts vector is bit-identical to its standalone
+    ``partition()`` run (tests/test_fleet.py).
+
+    Host syncs: one batched (n, m) fetch at admission, one (B, 3) stat
+    fetch per coarsening level per bucket (same cadence as standalone), and
+    exactly ONE blocking transfer for all uncoarsening results of the whole
+    fleet, after every bucket's level loop has been dispatched.
+    """
+    graphs = list(graphs)
+    if not graphs:
+        raise ValueError("partition_fleet needs at least one graph")
+    k = cfg.k
+    seeds = _resolve_trial_seeds(cfg)
+    trials = cfg.trials
+    times = {"coarsen_s": 0.0, "initpart_s": 0.0, "uncoarsen_s": 0.0,
+             "fetch_s": 0.0}
+
+    t0 = time.perf_counter()
+    schedule, bucket_map = gr.bucket_graphs(
+        graphs, ratio=cfg.bucket_ratio, safety=cfg.bucket_safety,
+        stall_ratio=cfg.stall_ratio, align=cfg.bucket_align,
+    )
+    times["bucket_s"] = time.perf_counter() - t0
+
+    pending = []  # (bucket, metas, fetch pytree, device parts_bt)
+    for cap in sorted(bucket_map, reverse=True):
+        idxs = bucket_map[cap]
+        B = len(idxs)
+        members = [
+            g if (g.n_max, g.m_max) == cap else g.with_capacity(*cap)
+            for g in (graphs[i] for i in idxs)
+        ]
+        gb = gr.stack_graphs(members)
+
+        t0 = time.perf_counter()
+        levels = co.multilevel_coarsen_fleet(
+            gb, schedule,
+            coarse_target=cfg.coarse_target, max_levels=cfg.max_levels,
+            stall_ratio=cfg.stall_ratio, seed=cfg.seed,
+        )
+        times["coarsen_s"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        parts_bt = initial.initial_partition_fleet(
+            levels[-1].graph, k, seeds, method=cfg.init_method
+        )
+        times["initpart_s"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        stats_per_level = []
+        metas = []
+        for i in range(len(levels) - 1, -1, -1):
+            lv = levels[i]
+            gi = lv.graph
+            c = cfg.c_finest if i == 0 else cfg.c_coarse
+            # static ELL width: max over lanes, from the coarsening stats —
+            # frozen lanes are included (their build_state runs too)
+            max_deg = (
+                int(lv.stats["max_degree"].max()) if cfg.backend == "ell"
+                else None
+            )
+            n_cap_i = gi.vwgt.shape[1]
+            if i == len(levels) - 1:
+                cmap = jnp.broadcast_to(
+                    jnp.arange(n_cap_i, dtype=jnp.int32), (B, n_cap_i)
+                )
+            else:
+                cmap = lv.cmap
+            parts_bt, stats = uncoarsen_level_fleet(
+                gi, cmap, parts_bt, jnp.asarray(lv.active), cfg.phi,
+                k=k, lam=cfg.lam, c=c, backend=cfg.backend,
+                patience=cfg.patience, max_iter=cfg.max_iter,
+                b_max=cfg.b_max, variant=cfg.variant,
+                rebuild_every=cfg.rebuild_every, max_degree=max_deg,
+            )
+            stats_per_level.append(stats)
+            meta = {
+                "level": i,
+                "n_max": lv.stats["n_max"], "m_max": lv.stats["m_max"],
+                "n": lv.stats["n"], "m": lv.stats["m"],
+                "max_degree": lv.stats["max_degree"],
+                "active": lv.active,
+            }
+            if max_deg is not None:
+                meta["ell_width"] = max_deg
+            metas.append(meta)
+
+        fstats = stats_per_level[-1]
+        ep = _fleet_epilogue(
+            levels[0].graph, parts_bt,
+            fstats["best_balanced"], fstats["best_cost"],
+            fstats["best_maxsize"], k=k, lam=cfg.lam,
+        )
+        fetch = {
+            "stats": {
+                kk: jnp.stack([s[kk] for s in stats_per_level])  # (L, B, T)
+                for kk in stats_per_level[0]
+            },
+            **ep,
+            "trial_cuts": fstats["best_cost"],        # (B, T)
+            "trial_balanced": fstats["best_balanced"],
+        }
+        bucket = FleetBucket(capacity=cap, indices=idxs, levels=len(levels),
+                             level_stats=metas)
+        pending.append((bucket, metas, fetch, parts_bt))
+        times["uncoarsen_s"] += time.perf_counter() - t0
+
+    # the ONE blocking transfer of the whole fleet's uncoarsening phase
+    t0 = time.perf_counter()
+    host_all = jax.device_get([p[2] for p in pending])
+    times["fetch_s"] = time.perf_counter() - t0
+    times["total_s"] = sum(times.values())
+
+    results: list = [None] * len(graphs)
+    buckets = []
+    for (bucket, metas, _, parts_bt), host in zip(pending, host_all):
+        buckets.append(bucket)
+        cap_n = bucket.capacity[0]
+        for j, gidx in enumerate(bucket.indices):
+            g_orig = graphs[gidx]
+            p = np.asarray(host["parts"][j])
+            # parts AND trial_parts line up with the caller's own padding
+            # (standalone contract: trial row t has the same shape as parts)
+            tp = parts_bt[j]
+            if g_orig.n_max <= cap_n:
+                p = p[: g_orig.n_max]
+                tp = tp[:, : g_orig.n_max]
+            else:
+                p = np.concatenate(
+                    [p, np.full(g_orig.n_max - cap_n, k, p.dtype)]
+                )
+                tp = jnp.pad(tp, ((0, 0), (0, g_orig.n_max - cap_n)),
+                             constant_values=k)
+            level_stats = []
+            for li, meta in enumerate(metas):
+                per = {kk: host["stats"][kk][li, j]
+                       for kk in host["stats"]}
+                entry = {
+                    "level": meta["level"],
+                    "n": int(meta["n"][j]), "m": int(meta["m"][j]),
+                    "max_degree": int(meta["max_degree"][j]),
+                    "n_max": meta["n_max"], "m_max": meta["m_max"],
+                    "active": bool(meta["active"][j]),
+                }
+                if trials == 1:
+                    entry |= {kk: int(vv[0]) for kk, vv in per.items()}
+                else:
+                    entry |= {kk: [int(x) for x in vv]
+                              for kk, vv in per.items()}
+                level_stats.append(entry)
+            results[gidx] = PartitionResult(
+                parts=jnp.asarray(p),
+                cut=int(host["cut"][j]),
+                imbalance=float(host["imbalance"][j]),
+                balanced=bool(host["balanced"][j]),
+                levels=int(sum(m["active"][j] for m in metas)),
+                # phase times are fleet-wide aggregates (one program serves
+                # every member) — flagged so readers never attribute the
+                # whole fleet's cost to a single graph
+                times=dict(times, shared_across_fleet=True),
+                level_stats=level_stats,
+                config=cfg,
+                trials=trials,
+                best_trial=int(host["best_idx"][j]),
+                trial_cuts=[int(x) for x in host["trial_cuts"][j]],
+                trial_balanced=[bool(x) for x in host["trial_balanced"][j]],
+                trial_parts=tp,
+            )
+    return FleetResult(results=results, buckets=buckets, times=times,
+                       trials=trials, config=cfg)
 
 
 def partition(g, cfg: PartitionConfig) -> PartitionResult:

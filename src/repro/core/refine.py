@@ -19,13 +19,17 @@ Deviations from the paper are documented in DESIGN.md §6; the functional
 behaviour (filters, afterburner ordering, locking, best-partition tracking
 with the phi tolerance) follows the paper line by line.
 
-Batch polymorphism (DESIGN.md §9): ``_refine_loop`` (and everything it
+Batch polymorphism (DESIGN.md §§9-10): ``_refine_loop`` (and everything it
 calls — ``jetlp_moves``, the rebalance kernels, the ConnState interface) is
-vmappable over a leading trial axis.  Traced stats stay traced; the loop
-condition is per-trial, and JAX's ``while_loop`` batching rule freezes a
-trial's carry once its own condition goes false, so a vmapped trial walks
-the exact trajectory of its sequential run — the batch merely runs until
-the LAST trial's patience expires.
+vmappable over a leading trial axis, and over a further graph axis for the
+fleet path.  Traced stats stay traced; the loop condition is per-trial, and
+JAX's ``while_loop`` batching rule freezes a trial's carry once its own
+condition goes false, so a vmapped trial walks the exact trajectory of its
+sequential run — the batch merely runs until the LAST trial's patience
+expires.  The optional ``active`` flag extends the same mechanism to whole
+lanes: a fleet lane whose own hierarchy ends above the current level enters
+with ``active=False``, its condition is false at iteration 0, and its
+(identity-projected) partition passes through bit-untouched.
 """
 from __future__ import annotations
 
@@ -187,6 +191,7 @@ def _refine_loop(
     b_max: int,
     variant: str,
     rebuild_every: int,
+    active=None,
 ):
     W = g.total_vweight()
     limit = metrics.size_limit(W, k, lam)
@@ -209,7 +214,14 @@ def _refine_loop(
     )
 
     def cond(st: RefineState):
-        return (st.since_best < patience) & (st.it < max_iter)
+        ok = (st.since_best < patience) & (st.it < max_iter)
+        if active is not None:
+            # fleet lane masking (DESIGN.md §10): an inactive lane's loop
+            # condition is false from iteration 0, so the while_loop batching
+            # rule freezes its carry immediately and the lane's best_parts
+            # pass the (projected) input partition through untouched
+            ok = ok & active
+        return ok
 
     def body(st: RefineState):
         balanced = jnp.max(st.conn.sizes) <= limit

@@ -1,0 +1,40 @@
+"""Shared test configuration.
+
+* Makes the repo root importable so tests can exercise the ``benchmarks``
+  package (the CI quality gate) without installing anything.
+* ``JET_TEST_BACKEND`` env filter: when set to ``dense`` / ``sorted`` /
+  ``ell``, every test parametrized over a connectivity ``backend`` keeps
+  only the matching parametrization (unparametrized tests always run).
+  CI matrixes its tier-1 job over this variable so the three backends run
+  in parallel lanes instead of serially in one.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+_BACKENDS = ("dense", "sorted", "ell")
+
+
+def pytest_collection_modifyitems(config, items):
+    backend = os.environ.get("JET_TEST_BACKEND")
+    if not backend:
+        return
+    if backend not in _BACKENDS:
+        raise ValueError(
+            f"JET_TEST_BACKEND={backend!r} must be one of {_BACKENDS}"
+        )
+    kept, deselected = [], []
+    for item in items:
+        callspec = getattr(item, "callspec", None)
+        param = callspec.params.get("backend") if callspec else None
+        if param is not None and param != backend:
+            deselected.append(item)
+        else:
+            kept.append(item)
+    if deselected:
+        config.hook.pytest_deselected(items=deselected)
+        items[:] = kept

@@ -119,6 +119,13 @@ def test_voronoi_seeds_mask_aware():
     np.testing.assert_array_equal(
         seeds, np.asarray(initial.spread_seeds(g, 8, seed=3))
     )
+    # k beyond even the PADDED capacity (k > n_max): the shortfall still
+    # round-robins over real ids instead of raising a shape error
+    tiny = build_csr_host(n, edges)  # n_max == n == 6
+    seeds = np.asarray(initial.spread_seeds(tiny, 9, seed=3))
+    assert seeds.shape == (9,) and (seeds < n).all()
+    parts = np.asarray(initial.voronoi_partition(tiny, 9, seed=3))
+    assert (parts[:n] < 9).all()
 
 
 def test_initial_partition_batch_matches_scalar():
