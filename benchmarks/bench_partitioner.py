@@ -448,9 +448,19 @@ def compare_baseline(fresh, baseline, tolerance=None):
 
 def check_baseline(baseline_path="BENCH_partitioner.json",
                    json_path="BENCH_partitioner.fresh.json",
-                   tolerance=None):
+                   tolerance=None,
+                   serve_baseline_path="BENCH_serve.json",
+                   serve_fresh_path=None):
     """Run the smoke suite fresh, then gate cut/balance against the
-    committed baseline.  Returns a process exit code."""
+    committed baseline.  Returns a process exit code.
+
+    When a serving baseline (``BENCH_serve.json``) is committed, the gate
+    also covers the §11 serving path: throughput and batch occupancy from
+    a fresh serve smoke are compared under the baseline's tolerance tags.
+    ``serve_fresh_path`` reuses an existing fresh serve report (the CI
+    serve-smoke job's artifact) instead of replaying the burst again; by
+    default the dense-backend smoke is re-run here.
+    """
     import os
 
     try:
@@ -470,6 +480,36 @@ def check_baseline(baseline_path="BENCH_partitioner.json",
     main(smoke=True, json_path=json_path, trials=2)
     fresh = main(smoke=True, json_path=json_path, fleet=True)
     regressions = compare_baseline(fresh, baseline, tolerance=tolerance)
+
+    # serving-path gate (bench_serve): same pattern — committed baseline,
+    # fresh numbers, tolerance tags from the baseline JSON
+    serve_baseline = None
+    try:
+        with open(serve_baseline_path) as f:
+            serve_baseline = json.load(f)
+    except (OSError, ValueError):
+        print(f"no serving baseline at {serve_baseline_path} — "
+              "serve gate skipped")
+    if serve_baseline is not None:
+        from benchmarks.bench_serve import compare_serve_baseline, serve_smoke
+
+        if serve_fresh_path and os.path.exists(serve_fresh_path):
+            with open(serve_fresh_path) as f:
+                serve_fresh = json.load(f)
+        else:
+            # serve_smoke MERGES into its json — start empty so stale
+            # backend sections can't mask a serving regression
+            try:
+                os.remove("BENCH_serve.fresh.json")
+            except OSError:
+                pass
+            serve_fresh = serve_smoke(
+                backends=("dense",), json_path="BENCH_serve.fresh.json")
+        # NOT forwarding `tolerance`: it is the cut-growth override, and
+        # loosening cuts must not loosen the structural occupancy gate —
+        # the serve gate reads its own tags from the serving baseline
+        regressions += compare_serve_baseline(serve_fresh, serve_baseline)
+
     if regressions:
         print(f"QUALITY GATE FAILED vs {baseline_path}:")
         for r in regressions:
@@ -588,6 +628,12 @@ if __name__ == "__main__":
                          "committed baseline JSON")
     ap.add_argument("--baseline", default="BENCH_partitioner.json",
                     help="baseline JSON for --check-baseline")
+    ap.add_argument("--serve-baseline", default="BENCH_serve.json",
+                    help="serving baseline JSON for --check-baseline "
+                         "(skipped when absent)")
+    ap.add_argument("--serve-fresh", default=None,
+                    help="reuse this fresh serve report for the serving "
+                         "gate instead of re-running the serve smoke")
     ap.add_argument("--tolerance", type=float, default=None,
                     help="override the baseline's cut-growth tolerance")
     ap.add_argument("--json", default=None,
@@ -601,6 +647,8 @@ if __name__ == "__main__":
             baseline_path=a.baseline,
             json_path=a.json or "BENCH_partitioner.fresh.json",
             tolerance=a.tolerance,
+            serve_baseline_path=a.serve_baseline,
+            serve_fresh_path=a.serve_fresh,
         ))
     main(quick=a.quick, smoke=a.smoke,
          json_path=a.json or "BENCH_partitioner.json", trials=a.trials,

@@ -121,6 +121,7 @@ def bucket_graphs(
     safety: float = 1.25,
     stall_ratio: float = 0.95,
     align: int = 64,
+    schedule: "tuple[tuple[int, int], ...] | None" = None,
 ):
     """Group a fleet of graphs into static shape buckets on a shared ladder.
 
@@ -131,6 +132,12 @@ def bucket_graphs(
     sizes land in the same bucket whenever they round to the same rungs —
     that sharing is the whole point: one compiled executable per (bucket,
     level-rung) signature serves every member.
+
+    With ``schedule`` given, the ladder is NOT rebuilt from the fleet max:
+    assignment runs on the caller's fixed ladder, so rung pairs (and
+    therefore compiled-executable signatures) stay stable across calls —
+    the serving contract (DESIGN.md §11).  Every graph must fit the
+    ladder's top rung; oversized graphs raise ``ValueError``.
 
     Returns ``(schedule, buckets)`` where ``buckets`` maps a capacity pair
     to the list of graph indices assigned to it (insertion-ordered by first
@@ -145,14 +152,108 @@ def bucket_graphs(
         raise ValueError("bucket_graphs needs at least one graph")
     sizes = [(int(n), int(m))
              for n, m in jax.device_get([(g.n, g.m) for g in graphs])]
-    n_top = _round_up(max(max(n for n, _ in sizes), 1), align)
-    m_top = _round_up(max(max(m for _, m in sizes), 1), align)
-    schedule = shape_schedule(n_top, m_top, ratio=ratio, safety=safety,
-                              stall_ratio=stall_ratio, align=align)
+    if schedule is None:
+        n_top = _round_up(max(max(n for n, _ in sizes), 1), align)
+        m_top = _round_up(max(max(m for _, m in sizes), 1), align)
+        schedule = shape_schedule(n_top, m_top, ratio=ratio, safety=safety,
+                                  stall_ratio=stall_ratio, align=align)
+    else:
+        n_top = max(nc for nc, _ in schedule)
+        m_top = max(mc for _, mc in schedule)
+        for i, (n, m) in enumerate(sizes):
+            if n > n_top or m > m_top:
+                raise ValueError(
+                    f"graph {i} (n={n}, m={m}) exceeds the fixed ladder's "
+                    f"top rung ({n_top}, {m_top}) — raise the ladder or "
+                    "partition it standalone"
+                )
     buckets: dict[tuple[int, int], list[int]] = {}
     for i, (n, m) in enumerate(sizes):
         buckets.setdefault(select_capacity(schedule, n, m), []).append(i)
     return schedule, buckets
+
+
+class StackedBucket(NamedTuple):
+    """One pre-stacked shape bucket, ready for ``partition_fleet_stacked``.
+
+    ``graph`` is a stacked ``(B, ...)`` :class:`Graph` at ``capacity``;
+    ``tags`` carries one caller id per lane (``None`` marks a filler lane
+    — a real graph stacked only to pin the batch width, whose result the
+    driver drops); ``orig_n_max`` records each lane's own padding so
+    results can be restored to the caller's shape contract.
+    """
+
+    capacity: tuple
+    graph: Graph
+    tags: tuple
+    orig_n_max: tuple
+
+
+class BucketAssembler:
+    """Incremental bucket assembly on a FIXED capacity ladder (§11 serving).
+
+    ``add`` queues graphs host-side (no device work); ``flush`` performs
+    ONE batched (n, m) admission fetch, assigns each graph its smallest
+    fitting rung pair on the pinned ladder, re-pads members with
+    :meth:`Graph.with_capacity`, and returns stacked buckets.  Unlike
+    :func:`bucket_graphs`' default path — which derives the ladder from
+    the fleet max, so two fleets can disagree on rungs — the ladder here
+    is pinned at construction, keeping compiled-executable signatures
+    stable across flushes: the whole point of warm serving.
+
+    ``lanes`` pins every flushed bucket to a fixed batch width: buckets
+    with fewer members are padded with filler copies of their first
+    member (``tags`` entry ``None``), buckets with more are split into
+    ``lanes``-wide chunks.  A fixed width keeps B out of the signature
+    degrees of freedom — one executable per (rung, k), whatever the
+    arrival pattern.  ``lanes=None`` stacks each bucket at its natural
+    occupancy (the ``partition_fleet`` behavior).
+    """
+
+    def __init__(self, schedule, lanes: "int | None" = None):
+        if lanes is not None and lanes < 1:
+            raise ValueError(f"lanes must be >= 1, got {lanes}")
+        self.schedule = tuple(schedule)
+        self.lanes = lanes
+        self._pending: list = []  # (tag, Graph)
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def add(self, tag, g: Graph) -> None:
+        self._pending.append((tag, g))
+
+    def flush(self) -> "list[StackedBucket]":
+        if not self._pending:
+            return []
+        tags = [t for t, _ in self._pending]
+        graphs = [g for _, g in self._pending]
+        self._pending = []
+        _, bucket_map = bucket_graphs(graphs, schedule=self.schedule)
+        out = []
+        for cap in sorted(bucket_map, reverse=True):
+            idxs = bucket_map[cap]
+            members = [
+                g if (g.n_max, g.m_max) == cap else g.with_capacity(*cap)
+                for g in (graphs[i] for i in idxs)
+            ]
+            width = self.lanes or len(members)
+            for lo in range(0, len(members), width):
+                chunk = members[lo: lo + width]
+                chunk_tags = [tags[i] for i in idxs[lo: lo + width]]
+                chunk_nmax = [graphs[i].n_max for i in idxs[lo: lo + width]]
+                fill = width - len(chunk)
+                if fill:
+                    chunk = chunk + [chunk[0]] * fill
+                    chunk_tags += [None] * fill
+                    chunk_nmax += [cap[0]] * fill
+                out.append(StackedBucket(
+                    capacity=cap,
+                    graph=stack_graphs(chunk),
+                    tags=tuple(chunk_tags),
+                    orig_n_max=tuple(chunk_nmax),
+                ))
+        return out
 
 
 def csr_from_edge_runs(

@@ -272,48 +272,39 @@ class FleetResult:
     config: Any = None
 
 
-def partition_fleet(graphs, cfg: PartitionConfig) -> FleetResult:
-    """Partition a fleet of graphs as shape-bucketed batched V-cycles.
+def partition_fleet_stacked(
+    buckets, cfg: PartitionConfig, schedule, times_extra=None,
+) -> FleetResult:
+    """Partition pre-stacked shape buckets — the serving entry point.
 
-    Graphs are grouped into static shape buckets on one shared §8 capacity
-    ladder (`graph.bucket_graphs`); each bucket's members are stacked along
-    a leading batch axis and run through coarsening, initial partitioning,
-    and uncoarsening vmapped over B graphs × T trials — one jitted
-    executable per (rung, k) signature serves the whole bucket.  Per-graph
-    termination (coarsening depth, stalls) is select-masked per lane, so
-    every graph's cut and parts vector is bit-identical to its standalone
-    ``partition()`` run (tests/test_fleet.py).
+    ``buckets`` is a list of :class:`~repro.core.graph.StackedBucket`
+    (e.g. from a :class:`~repro.core.graph.BucketAssembler` flush) and
+    ``schedule`` the fixed §8 capacity ladder they were assembled on.
+    Runs the same batched V-cycle as :func:`partition_fleet` but skips
+    admission entirely — bucket assignment, re-padding, and stacking
+    already happened, possibly incrementally as requests arrived.
 
-    Host syncs: one batched (n, m) fetch at admission, one (B, 3) stat
-    fetch per coarsening level per bucket (same cadence as standalone), and
-    exactly ONE blocking transfer for all uncoarsening results of the whole
-    fleet, after every bucket's level loop has been dispatched.
+    Returns a :class:`FleetResult` whose ``results`` is a ``{tag:
+    PartitionResult}`` dict keyed by the buckets' lane tags; filler lanes
+    (tag ``None``) are computed (they pin the batch width so compiled
+    signatures stay stable) but dropped from ``results``.
     """
-    graphs = list(graphs)
-    if not graphs:
-        raise ValueError("partition_fleet needs at least one graph")
+    if not buckets:
+        raise ValueError("partition_fleet_stacked needs at least one bucket")
     k = cfg.k
     seeds = _resolve_trial_seeds(cfg)
     trials = cfg.trials
     times = {"coarsen_s": 0.0, "initpart_s": 0.0, "uncoarsen_s": 0.0,
              "fetch_s": 0.0}
+    if times_extra:  # e.g. the wrapper's admission/bucketing time, so
+        times.update(times_extra)  # member times keep the full accounting
 
-    t0 = time.perf_counter()
-    schedule, bucket_map = gr.bucket_graphs(
-        graphs, ratio=cfg.bucket_ratio, safety=cfg.bucket_safety,
-        stall_ratio=cfg.stall_ratio, align=cfg.bucket_align,
-    )
-    times["bucket_s"] = time.perf_counter() - t0
-
-    pending = []  # (bucket, metas, fetch pytree, device parts_bt)
-    for cap in sorted(bucket_map, reverse=True):
-        idxs = bucket_map[cap]
+    pending = []  # (bucket record, metas, fetch pytree, device parts_bt)
+    for sb in buckets:
+        cap = sb.capacity
+        idxs = list(sb.tags)
         B = len(idxs)
-        members = [
-            g if (g.n_max, g.m_max) == cap else g.with_capacity(*cap)
-            for g in (graphs[i] for i in idxs)
-        ]
-        gb = gr.stack_graphs(members)
+        gb = sb.graph
 
         t0 = time.perf_counter()
         levels = co.multilevel_coarsen_fleet(
@@ -385,34 +376,37 @@ def partition_fleet(graphs, cfg: PartitionConfig) -> FleetResult:
         }
         bucket = FleetBucket(capacity=cap, indices=idxs, levels=len(levels),
                              level_stats=metas)
-        pending.append((bucket, metas, fetch, parts_bt))
+        pending.append((bucket, sb.orig_n_max, metas, fetch, parts_bt))
         times["uncoarsen_s"] += time.perf_counter() - t0
 
     # the ONE blocking transfer of the whole fleet's uncoarsening phase
     t0 = time.perf_counter()
-    host_all = jax.device_get([p[2] for p in pending])
+    host_all = jax.device_get([p[3] for p in pending])
     times["fetch_s"] = time.perf_counter() - t0
     times["total_s"] = sum(times.values())
 
-    results: list = [None] * len(graphs)
-    buckets = []
-    for (bucket, metas, _, parts_bt), host in zip(pending, host_all):
-        buckets.append(bucket)
+    results: dict = {}
+    out_buckets = []
+    for (bucket, orig_n_max, metas, _, parts_bt), host in \
+            zip(pending, host_all):
+        out_buckets.append(bucket)
         cap_n = bucket.capacity[0]
-        for j, gidx in enumerate(bucket.indices):
-            g_orig = graphs[gidx]
+        for j, tag in enumerate(bucket.indices):
+            if tag is None:  # filler lane: batch-width ballast only
+                continue
+            own_n_max = orig_n_max[j]
             p = np.asarray(host["parts"][j])
             # parts AND trial_parts line up with the caller's own padding
             # (standalone contract: trial row t has the same shape as parts)
             tp = parts_bt[j]
-            if g_orig.n_max <= cap_n:
-                p = p[: g_orig.n_max]
-                tp = tp[:, : g_orig.n_max]
+            if own_n_max <= cap_n:
+                p = p[:own_n_max]
+                tp = tp[:, :own_n_max]
             else:
                 p = np.concatenate(
-                    [p, np.full(g_orig.n_max - cap_n, k, p.dtype)]
+                    [p, np.full(own_n_max - cap_n, k, p.dtype)]
                 )
-                tp = jnp.pad(tp, ((0, 0), (0, g_orig.n_max - cap_n)),
+                tp = jnp.pad(tp, ((0, 0), (0, own_n_max - cap_n)),
                              constant_values=k)
             level_stats = []
             for li, meta in enumerate(metas):
@@ -431,7 +425,7 @@ def partition_fleet(graphs, cfg: PartitionConfig) -> FleetResult:
                     entry |= {kk: [int(x) for x in vv]
                               for kk, vv in per.items()}
                 level_stats.append(entry)
-            results[gidx] = PartitionResult(
+            results[tag] = PartitionResult(
                 parts=jnp.asarray(p),
                 cut=int(host["cut"][j]),
                 imbalance=float(host["imbalance"][j]),
@@ -449,8 +443,63 @@ def partition_fleet(graphs, cfg: PartitionConfig) -> FleetResult:
                 trial_balanced=[bool(x) for x in host["trial_balanced"][j]],
                 trial_parts=tp,
             )
-    return FleetResult(results=results, buckets=buckets, times=times,
+    return FleetResult(results=results, buckets=out_buckets, times=times,
                        trials=trials, config=cfg)
+
+
+def partition_fleet(graphs, cfg: PartitionConfig,
+                    schedule=None) -> FleetResult:
+    """Partition a fleet of graphs as shape-bucketed batched V-cycles.
+
+    Graphs are grouped into static shape buckets on one shared §8 capacity
+    ladder (`graph.bucket_graphs`); each bucket's members are stacked along
+    a leading batch axis and run through coarsening, initial partitioning,
+    and uncoarsening vmapped over B graphs × T trials — one jitted
+    executable per (rung, k) signature serves the whole bucket.  Per-graph
+    termination (coarsening depth, stalls) is select-masked per lane, so
+    every graph's cut and parts vector is bit-identical to its standalone
+    ``partition()`` run (tests/test_fleet.py).
+
+    With ``schedule`` given, bucketing runs on that fixed ladder instead
+    of one derived from the fleet max — the serving path, where rung
+    stability across calls keeps compiled executables warm (§11).
+
+    Host syncs: one batched (n, m) fetch at admission, one (B, 3) stat
+    fetch per coarsening level per bucket (same cadence as standalone), and
+    exactly ONE blocking transfer for all uncoarsening results of the whole
+    fleet, after every bucket's level loop has been dispatched.
+    """
+    graphs = list(graphs)
+    if not graphs:
+        raise ValueError("partition_fleet needs at least one graph")
+    t0 = time.perf_counter()
+    schedule, bucket_map = gr.bucket_graphs(
+        graphs, ratio=cfg.bucket_ratio, safety=cfg.bucket_safety,
+        stall_ratio=cfg.stall_ratio, align=cfg.bucket_align,
+        schedule=schedule,
+    )
+    buckets = []
+    for cap in sorted(bucket_map, reverse=True):
+        idxs = bucket_map[cap]
+        members = [
+            g if (g.n_max, g.m_max) == cap else g.with_capacity(*cap)
+            for g in (graphs[i] for i in idxs)
+        ]
+        buckets.append(gr.StackedBucket(
+            capacity=cap,
+            graph=gr.stack_graphs(members),
+            tags=tuple(idxs),
+            orig_n_max=tuple(graphs[i].n_max for i in idxs),
+        ))
+    bucket_s = time.perf_counter() - t0
+
+    sres = partition_fleet_stacked(buckets, cfg, schedule,
+                                   times_extra={"bucket_s": bucket_s})
+    results: list = [None] * len(graphs)
+    for tag, r in sres.results.items():
+        results[tag] = r
+    return FleetResult(results=results, buckets=sres.buckets,
+                       times=sres.times, trials=sres.trials, config=cfg)
 
 
 def partition(g, cfg: PartitionConfig) -> PartitionResult:

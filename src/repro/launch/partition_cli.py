@@ -158,6 +158,20 @@ def main(argv=None):
             )
         specs = [_parse_fleet_spec(s, args.size, args.seed)
                  for s in args.fleet]
+        dupes = sorted({
+            f"{kind}:{size}:{seed}" for i, (kind, size, seed)
+            in enumerate(specs) if (kind, size, seed) in specs[:i]
+        })
+        if dupes:
+            print(
+                f"ERROR: duplicate --fleet member name(s): "
+                f"{', '.join(dupes)} — every fleet member must be unique, "
+                "or downstream consumers keying reports by spec would "
+                "silently collapse entries (give duplicates distinct "
+                "seeds, e.g. grid:96:0 grid:96:1)",
+                file=sys.stderr,
+            )
+            return 2
         graphs = [_make_graph(kind, size, seed)
                   for kind, size, seed in specs]
         fres = partition_fleet(graphs, cfg)

@@ -1,0 +1,164 @@
+"""Bucketing/stacking invariants (DESIGN.md §10-§11), property-style.
+
+The fleet and serving paths both stand on three graph-layer contracts:
+``bucket_graphs`` assigns every member a rung it actually fits (the
+smallest fitting one, per axis), ``stack_graphs``/``unstack_graph``
+round-trip bit-identically, and a single-member bucket is literally its
+member (re-padded).  Swept over seeded random shapes like
+tests/test_matching_properties.py sweeps matchings.
+"""
+import numpy as np
+import pytest
+
+from repro.core import graph as gr
+from repro.core.coarsen import select_capacity, shape_schedule
+from repro.data import graphs as gen
+
+SEEDS = [0, 1, 7]
+
+
+def _random_fleet(seed: int, count: int = 6):
+    """A seeded mixed-family fleet with clustered sizes (so some members
+    share rungs) and outliers (so some don't)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(count):
+        fam = rng.integers(0, 3)
+        if fam == 0:
+            r = int(rng.integers(5, 14))
+            out.append(gen.grid2d(r, max(2, r - int(rng.integers(0, 2)))))
+        elif fam == 1:
+            out.append(gen.small_world(int(rng.integers(32, 160)),
+                                       seed=int(rng.integers(1 << 16))))
+        else:
+            out.append(gen.random_geometric(int(rng.integers(32, 128)),
+                                            seed=int(rng.integers(1 << 16))))
+    return out
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_every_member_fits_its_rung(seed):
+    graphs = _random_fleet(seed)
+    schedule, buckets = gr.bucket_graphs(graphs)
+    assigned = {i: cap for cap, idxs in buckets.items() for i in idxs}
+    assert sorted(assigned) == list(range(len(graphs)))
+    n_rungs = sorted({nc for nc, _ in schedule})
+    m_rungs = sorted({mc for _, mc in schedule})
+    for i, g in enumerate(graphs):
+        n, m = int(g.n), int(g.m)
+        n_cap, m_cap = assigned[i]
+        # fits ...
+        assert n <= n_cap and m <= m_cap, (i, (n, m), (n_cap, m_cap))
+        # ... and is the SMALLEST fitting rung per axis
+        assert n_cap == min(r for r in n_rungs if r >= n)
+        assert m_cap == min(r for r in m_rungs if r >= m)
+        assert (n_cap, m_cap) == select_capacity(schedule, n, m)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fixed_schedule_assignment_is_stable(seed):
+    """On a pinned ladder (the §11 serving contract), each graph's rung
+    depends only on its own (n, m) — never on the rest of the fleet."""
+    graphs = _random_fleet(seed)
+    schedule = shape_schedule(512, 4096, align=64)
+    _, together = gr.bucket_graphs(graphs, schedule=schedule)
+    assigned = {i: cap for cap, idxs in together.items() for i in idxs}
+    for i, g in enumerate(graphs):
+        _, alone = gr.bucket_graphs([g], schedule=schedule)
+        assert list(alone) == [assigned[i]], i
+    # an oversized graph is rejected instead of silently re-laddering
+    with pytest.raises(ValueError, match="top rung"):
+        gr.bucket_graphs([gen.grid2d(30, 30)],
+                         schedule=shape_schedule(64, 256, align=64))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_stack_unstack_roundtrip_bit_identical(seed):
+    graphs = _random_fleet(seed, count=4)
+    schedule, buckets = gr.bucket_graphs(graphs)
+    for cap, idxs in buckets.items():
+        members = [graphs[i].with_capacity(*cap) for i in idxs]
+        gb = gr.stack_graphs(members)
+        for b, mem in enumerate(members):
+            back = gr.unstack_graph(gb, b)
+            for name, leaf, orig in zip(gr.Graph._fields, back, mem):
+                np.testing.assert_array_equal(
+                    np.asarray(leaf), np.asarray(orig),
+                    err_msg=f"{cap}/{b}/{name}")
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_single_member_bucket_is_its_member(seed):
+    """A bucket of one: stacking then unstacking lane 0 returns the
+    member (at bucket capacity) bit-identically — padding never leaks
+    into values."""
+    g = _random_fleet(seed, count=1)[0]
+    schedule, buckets = gr.bucket_graphs([g])
+    (cap, idxs), = buckets.items()
+    assert idxs == [0]
+    padded = g.with_capacity(*cap)
+    gb = gr.stack_graphs([padded])
+    back = gr.unstack_graph(gb, 0)
+    for name, leaf, orig in zip(gr.Graph._fields, back, padded):
+        np.testing.assert_array_equal(np.asarray(leaf), np.asarray(orig),
+                                      err_msg=name)
+    # and the true payload is untouched by the re-padding
+    n, m = int(g.n), int(g.m)
+    assert int(back.n) == n and int(back.m) == m
+    np.testing.assert_array_equal(np.asarray(back.vwgt)[:n],
+                                  np.asarray(g.vwgt)[:n])
+    np.testing.assert_array_equal(np.asarray(back.adjncy)[:m],
+                                  np.asarray(g.adjncy)[:m])
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_bucket_assembler_matches_bucket_graphs(seed):
+    """Incremental assembly (add/flush) lands every graph in the same
+    rung as the one-shot path, preserves tags, and its stacked lanes are
+    bit-identical to the members."""
+    graphs = _random_fleet(seed)
+    schedule = shape_schedule(512, 4096, align=64)
+    _, expect = gr.bucket_graphs(graphs, schedule=schedule)
+    asm = gr.BucketAssembler(schedule)
+    for i, g in enumerate(graphs):
+        asm.add(i, g)
+    assert len(asm) == len(graphs)
+    flushed = asm.flush()
+    assert len(asm) == 0 and asm.flush() == []
+    got = {sb.capacity: list(sb.tags) for sb in flushed}
+    assert got == expect
+    for sb in flushed:
+        assert sb.graph.vwgt.shape == (len(sb.tags), sb.capacity[0])
+        for b, tag in enumerate(sb.tags):
+            member = graphs[tag].with_capacity(*sb.capacity)
+            back = gr.unstack_graph(sb.graph, b)
+            for name, leaf, orig in zip(gr.Graph._fields, back, member):
+                np.testing.assert_array_equal(
+                    np.asarray(leaf), np.asarray(orig), err_msg=name)
+            assert sb.orig_n_max[b] == graphs[tag].n_max
+
+
+def test_bucket_assembler_fixed_lanes():
+    """lanes=N pins every flushed bucket to width N: short buckets pad
+    with filler copies of lane 0 (tag None), long buckets split."""
+    schedule = shape_schedule(256, 2048, align=64)
+    gs = [gen.grid2d(6, 6), gen.grid2d(6, 5), gen.grid2d(6, 4)]
+    asm = gr.BucketAssembler(schedule, lanes=2)
+    for i, g in enumerate(gs):
+        asm.add(f"req{i}", g)
+    flushed = asm.flush()
+    for sb in flushed:
+        assert len(sb.tags) == 2
+        assert sb.graph.vwgt.shape[0] == 2
+    tags = sorted(t for sb in flushed for t in sb.tags if t is not None)
+    assert tags == ["req0", "req1", "req2"]
+    fillers = [sb for sb in flushed if None in sb.tags]
+    assert fillers, "3 members at width 2 must leave one filler lane"
+    for sb in fillers:
+        j = sb.tags.index(None)
+        # filler lane is a bit-copy of lane 0 (same capacity, valid graph)
+        for leaf in sb.graph:
+            np.testing.assert_array_equal(np.asarray(leaf[j]),
+                                          np.asarray(leaf[0]))
+    with pytest.raises(ValueError):
+        gr.BucketAssembler(schedule, lanes=0)
